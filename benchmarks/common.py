@@ -1,0 +1,64 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.monitor import TraceDB
+from repro.core.scheduler import make_scheduler
+from repro.workflow.cluster import CLUSTERS
+from repro.workflow.engine import Engine, EngineConfig
+from repro.workflow.nfcore import WORKFLOWS
+
+RUNS = 7          # paper: seven measured runs per scheduler-workflow pair
+PAPER = {
+    "5;5;5": {"vs_baselines": 17.87, "vs_sjfn": 4.65},
+    "5;4;4;2": {"vs_baselines": 21.47, "vs_sjfn": 4.45},
+    "overall": {"vs_baselines": 19.8, "vs_sjfn": 4.54},
+}
+
+
+def geomean(xs):
+    return float(np.exp(np.mean(np.log(np.asarray(xs, dtype=np.float64)))))
+
+
+def run_series(cluster: str, workflow: str, scheduler: str, runs: int = RUNS,
+               seed0: int = 3, engine_cfg: EngineConfig | None = None,
+               disabled=None, extra_workflow: str | None = None,
+               warmup: int = 0):
+    """Paper protocol: a fresh TraceDB per scheduler-workflow pair (the DB is
+    deleted between pairs), run `runs` times; Tarema/SJFN accumulate history
+    across the runs of a pair (A3: recurring workflows).  ``warmup`` runs are
+    executed but not measured (the paper's 'initial run ... is not part of
+    the benchmark')."""
+    specs = CLUSTERS[cluster]()
+    db = TraceDB()
+    out = []
+    for idx in range(warmup + runs):
+        r = idx - warmup
+        sched = make_scheduler(scheduler, specs, seed=idx * 7 + seed0)
+        cfg = engine_cfg or EngineConfig()
+        eng = Engine(specs, sched, db, dataclasses.replace(cfg, seed=idx),
+                     disabled_nodes=disabled)
+        eng.submit(WORKFLOWS[workflow](), run_id=idx, seed=11)
+        if extra_workflow:
+            eng.submit(WORKFLOWS[extra_workflow](), run_id=idx, seed=13)
+        res = eng.run()
+        if r < 0:
+            continue
+        rec = {"makespan": res["makespan"], "assignments": res["assignments"]}
+        if extra_workflow:
+            per_wf = {}
+            for t in eng.done.values():
+                per_wf[t.workflow] = max(per_wf.get(t.workflow, 0.0), t.end_t)
+            rec["per_workflow"] = per_wf
+        out.append(rec)
+    return out
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6

@@ -1,0 +1,39 @@
+"""Figure 3: CPU and memory utilisation profiles of the five workflows.
+Validates the qualitative resource mixes: mag CPU-intensive; chipseq and
+eager memory-intensive.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.monitor import TraceDB
+from repro.core.scheduler import make_scheduler
+from repro.workflow.cluster import cluster_555
+from repro.workflow.engine import Engine, EngineConfig
+from repro.workflow.nfcore import WORKFLOWS
+from benchmarks.common import timed
+
+
+def main(quick: bool = False) -> dict:
+    print("fig3_workflow_profiles")
+    specs = cluster_555()
+    out = {}
+    for wf in WORKFLOWS:
+        db = TraceDB()
+        sched = make_scheduler("fair", specs, seed=0)
+        eng = Engine(specs, sched, db, EngineConfig(seed=0))
+        eng.submit(WORKFLOWS[wf](), run_id=0, seed=11)
+        _, us = timed(eng.run)
+        cpu = np.mean(db.all_usages(wf, "cpu"))
+        mem = np.mean(db.all_usages(wf, "mem"))
+        out[wf] = {"cpu_pct": float(cpu), "mem_gb": float(mem)}
+        print(f"fig3/{wf},{us:.0f},cpu%={cpu:.0f} mem_gb={mem:.2f}")
+    cpu_rank = max(out, key=lambda w: out[w]["cpu_pct"])
+    mem_rank = max(out, key=lambda w: out[w]["mem_gb"])
+    print(f"# most cpu-intensive: {cpu_rank} (paper: mag); "
+          f"most memory-intensive: {mem_rank} (paper: chipseq/eager)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Figures 4 & 5: isolated workflow runtimes, five schedulers x five
+workflows x both clusters, seven measured runs each.  Validates the paper's
+headline claims:
+
+    geomean reduction vs {RoundRobin, Fair, FillNodes}: 17.87% (5;5;5),
+    21.47% (5;4;4;2), 19.8% overall;
+    geomean reduction vs SJFN: 4.65% / 4.45% (4.54% overall).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.scheduler import BASELINES, SCHEDULERS
+from repro.workflow.nfcore import WORKFLOWS
+from benchmarks.common import PAPER, RUNS, geomean, run_series, timed
+
+
+def main(quick: bool = False) -> dict:
+    runs = 3 if quick else RUNS
+    results = {}
+    print("fig45_runtimes")
+    for cluster in ("5;5;5", "5;4;4;2"):
+        for wf in WORKFLOWS:
+            for sched in SCHEDULERS:
+                series, us = timed(run_series, cluster, wf, sched, runs)
+                times = [r["makespan"] for r in series]
+                results[(cluster, wf, sched)] = times
+                print(f"fig45/{cluster}/{wf}/{sched},{us:.0f},"
+                      f"mean={np.mean(times):.0f} std={np.std(times):.0f}")
+
+    summary = {}
+    overall = {"base": [], "sjfn": [], "tarema": []}
+    for cluster in ("5;5;5", "5;4;4;2"):
+        base = [t for (c, w, s), ts in results.items()
+                if c == cluster and s in BASELINES for t in ts]
+        sjfn = [t for (c, w, s), ts in results.items()
+                if c == cluster and s == "sjfn" for t in ts]
+        tar = [t for (c, w, s), ts in results.items()
+               if c == cluster and s == "tarema" for t in ts]
+        overall["base"] += base
+        overall["sjfn"] += sjfn
+        overall["tarema"] += tar
+        vs_base = 100 * (1 - geomean(tar) / geomean(base))
+        vs_sjfn = 100 * (1 - geomean(tar) / geomean(sjfn))
+        p = PAPER[cluster]
+        print(f"# {cluster}: tarema vs baselines {vs_base:.2f}% "
+              f"(paper {p['vs_baselines']}%), vs SJFN {vs_sjfn:.2f}% "
+              f"(paper {p['vs_sjfn']}%)")
+        summary[cluster] = {"vs_baselines": vs_base, "vs_sjfn": vs_sjfn}
+    vs_base = 100 * (1 - geomean(overall["tarema"]) / geomean(overall["base"]))
+    vs_sjfn = 100 * (1 - geomean(overall["tarema"]) / geomean(overall["sjfn"]))
+    print(f"# overall: tarema vs baselines {vs_base:.2f}% (paper 19.8%), "
+          f"vs SJFN {vs_sjfn:.2f}% (paper 4.54%)")
+    summary["overall"] = {"vs_baselines": vs_base, "vs_sjfn": vs_sjfn}
+    return summary
+
+
+if __name__ == "__main__":
+    main()

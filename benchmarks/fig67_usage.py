@@ -1,0 +1,45 @@
+"""Figures 6 & 7: resource usage Tarema vs SJFN — distribution of task
+assignments over the node similarity groups.  Validates the paper's
+observation: SJFN concentrates on the most powerful groups; Tarema's usage is
+balanced roughly according to group capacity (fair cluster usage).
+"""
+from __future__ import annotations
+
+from collections import Counter
+
+from repro.workflow.cluster import CLUSTERS
+from repro.workflow.nfcore import WORKFLOWS
+from benchmarks.common import RUNS, run_series, timed
+
+# machine type -> group rank (1 weakest) per cluster, from Table IV
+GROUP_OF = {"5;5;5": {"n1": 1, "n2": 2, "c2": 3},
+            "5;4;4;2": {"e2": 1, "n1": 1, "n2": 2, "c2": 3}}
+
+
+def main(quick: bool = False) -> dict:
+    runs = 2 if quick else RUNS
+    out = {}
+    print("fig67_usage")
+    for cluster in ("5;5;5", "5;4;4;2"):
+        for sched in ("tarema", "sjfn"):
+            counts = Counter()
+            for wf in WORKFLOWS:
+                series, us = timed(run_series, cluster, wf, sched, runs)
+                for rec in series:
+                    for (task, node, s, e) in rec["assignments"]:
+                        counts[GROUP_OF[cluster][node.split("-")[1]]] += 1
+            total = sum(counts.values())
+            frac = {g: round(100 * counts[g] / total, 1) for g in sorted(counts)}
+            print(f"fig67/{cluster}/{sched},0,group_share%={frac}")
+            out[(cluster, sched)] = frac
+        t, s = out[(cluster, "tarema")], out[(cluster, "sjfn")]
+        groups = sorted(set(t) | set(s))
+        spread = lambda d: max(d.get(g, 0.0) for g in groups) - min(d.get(g, 0.0) for g in groups)
+        balanced = spread(t) < spread(s)
+        print(f"# {cluster}: tarema more balanced than sjfn: {balanced} "
+              f"(sjfn top-group share {s.get(3, 0)}% vs tarema {t.get(3, 0)}%)")
+    return {f"{c}/{s}": v for (c, s), v in out.items()}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Figure 8: two long-running workflows (viralrecon + cageseq) in parallel on
+the 5;5;5 cluster — full cluster, and with 20% / 40% of nodes disabled per
+group.  Reports the sum of workflow runtimes, Tarema vs SJFN.  Paper: Tarema
+reduces the sum by 6.22% (full) and 23.90% (40% restricted).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.workflow.cluster import CLUSTERS
+from benchmarks.common import RUNS, geomean, run_series, timed
+
+
+def _disabled(frac: float) -> set:
+    """Disable frac of the machines in each node group (paper protocol)."""
+    specs = CLUSTERS["5;5;5"]()
+    out = set()
+    by_machine: dict[str, list] = {}
+    for s in specs:
+        by_machine.setdefault(s.machine, []).append(s.name)
+    for names in by_machine.values():
+        k = int(round(frac * len(names)))
+        out.update(names[:k])
+    return out
+
+
+def main(quick: bool = False) -> dict:
+    runs = 2 if quick else RUNS
+    print("fig8_multiworkflow")
+    summary = {}
+    paper = {"full": 6.22, "restrict20": None, "restrict40": 23.90}
+    for label, frac in (("full", 0.0), ("restrict20", 0.2), ("restrict40", 0.4)):
+        sums = {}
+        for sched in ("tarema", "sjfn"):
+            series, us = timed(run_series, "5;5;5", "viralrecon", sched, runs,
+                               disabled=_disabled(frac),
+                               extra_workflow="cageseq", warmup=1)
+            sums[sched] = [sum(r["per_workflow"].values()) for r in series]
+            print(f"fig8/{label}/{sched},{us:.0f},"
+                  f"sum_mean={np.mean(sums[sched]):.0f}")
+        red = 100 * (1 - geomean(sums["tarema"]) / geomean(sums["sjfn"]))
+        ref = f" (paper {paper[label]}%)" if paper[label] else ""
+        print(f"# {label}: tarema vs sjfn runtime-sum reduction {red:.2f}%{ref}")
+        summary[label] = red
+    return summary
+
+
+if __name__ == "__main__":
+    main()

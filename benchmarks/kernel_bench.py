@@ -1,0 +1,60 @@
+"""Kernel microbenchmarks: wall time of the pure-jnp reference paths on this
+host (interpret-mode Pallas timing is meaningless — the kernels are TPU
+targets) plus analytic FLOP counts, printed as name,us_per_call,derived CSV.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+
+def _time(fn, *args, reps: int = 3) -> float:
+    fn(*args).block_until_ready() if hasattr(fn(*args), "block_until_ready") \
+        else None
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.tree.map(lambda x: x.block_until_ready(), out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main(quick: bool = False) -> dict:
+    print("kernel_bench (jnp reference paths on CPU; kernels are TPU targets)")
+    rng = np.random.default_rng(0)
+    out = {}
+
+    BH, S, hd = (4, 512, 64) if quick else (8, 1024, 64)
+    q = jnp.asarray(rng.standard_normal((BH, S, hd)), jnp.float32)
+    us = _time(jax.jit(ref.flash_attention), q, q, q)
+    flops = 4 * BH * S * S * hd
+    out["flash_attention"] = us
+    print(f"kernels/flash_attention_ref,{us:.0f},gflops={flops/us/1e3:.1f}")
+
+    r = jnp.asarray(rng.standard_normal((BH, S, hd)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.8, 0.99, (BH, S, hd)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((BH, hd)), jnp.float32)
+    us = _time(jax.jit(ref.wkv6), r, r, r, w, u)
+    out["wkv6"] = us
+    print(f"kernels/wkv6_ref,{us:.0f},state_updates={BH*S}")
+
+    a = jnp.asarray(rng.uniform(0.8, 0.999, (4, S, 256)), jnp.float32)
+    g = jnp.asarray(rng.standard_normal((4, S, 256)), jnp.float32)
+    us = _time(jax.jit(ref.rglru_scan), a, g)
+    out["rglru"] = us
+    print(f"kernels/rglru_ref,{us:.0f},steps={S}")
+
+    x = jnp.asarray(rng.standard_normal((16384, 8)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+    us = _time(jax.jit(ref.kmeans_assign), x, c)
+    out["kmeans_assign"] = us
+    print(f"kernels/kmeans_assign_ref,{us:.0f},points=16384")
+    return out
+
+
+if __name__ == "__main__":
+    main()

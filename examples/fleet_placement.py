@@ -1,0 +1,99 @@
+"""Beyond-paper: Tarema as a heterogeneity-aware placement layer for ML jobs.
+
+"Nodes" are TPU pod-slices of mixed generations (plus this host, profiled
+with real JAX microbenchmarks); "tasks" are the dry-run cells of the ten
+assigned architectures, labeled from their roofline intensities
+(compute / memory / collective percentiles, per the paper's labeling
+formula).  The phase-3 scoring allocator then matches cells to pod groups:
+compute-bound train cells land on the newest pods, memory-bound decode cells
+on high-HBM-bandwidth pods, collective-bound MoE cells on pods with the
+fastest interconnect.
+
+    PYTHONPATH=src python examples/fleet_placement.py
+"""
+import numpy as np
+
+from repro.configs.base import SHAPES, get_config, valid_cells
+from repro.core import allocation, labeling
+from repro.core.clustering import choose_k
+from repro.core.profiler import NodeProfile, profile_local
+from repro.launch.analysis import collective_model, count_cell, model_flops
+from repro.launch.cells import padding_overrides
+
+# --- a heterogeneous accelerator fleet (public spec-sheet numbers) ---------
+# features: (compute TFLOP/s bf16, HBM GB/s, interconnect GB/s/link)
+FLEET = {
+    # 8x v5e pods, 4x v4 pods, 4x v5p pods, 2x older v3 pods
+    **{f"v5e-{i}": (197.0, 819.0, 50.0) for i in range(8)},
+    **{f"v4-{i}": (275.0, 1228.0, 50.0) for i in range(4)},
+    **{f"v5p-{i}": (459.0, 2765.0, 100.0) for i in range(4)},
+    **{f"v3-{i}": (123.0, 900.0, 70.0) for i in range(2)},
+}
+
+
+def fleet_profiles():
+    rng = np.random.default_rng(0)
+    out = []
+    for name, (tf, hbm, ici) in FLEET.items():
+        jit = lambda v: v * (1 + rng.uniform(-0.02, 0.02))
+        out.append(NodeProfile(name, name.rsplit("-", 1)[0],
+                               {"cpu": jit(tf), "mem": jit(hbm),
+                                "io_seq_read": jit(ici), "io_seq_write": jit(ici),
+                                "io_rand_read": jit(ici), "io_rand_write": jit(ici)},
+                               {"cores": 256, "mem_gb": 16 * 256}))
+    return out
+
+
+def main():
+    # phase 1: group the fleet
+    profiles = fleet_profiles()
+    X = np.stack([p.vector() for p in profiles])
+    res = choose_k(X, k_max=6)
+    info = labeling.build_group_info(profiles, res["labels"])
+    print(f"fleet: {res['k']} pod groups (silhouette {res['silhouette']:.3f})")
+    for g, nodes in sorted(info.group_nodes.items()):
+        print(f"  group {info.node_labels[g]}: {sorted(nodes)}")
+
+    # a real microbenchmark of THIS host, for flavour (same profiler API)
+    local = profile_local()
+    print(f"\nthis host profiled: {local.features['cpu']:.1f} GFLOP/s matmul, "
+          f"{local.features['mem']:.1f} GB/s stream")
+
+    # phase 2: label the dry-run cells by roofline intensities
+    cells = valid_cells()
+    intensities = {}
+    for arch, shape_name in cells:
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        cfg_p = cfg.with_overrides(**padding_overrides(cfg, shape, 16))
+        counts = count_cell(cfg_p, shape)
+        coll = collective_model(cfg_p, shape)
+        intensities[(arch, shape_name)] = {
+            "cpu": counts.flops, "mem": counts.bytes_min, "io": coll["total"]}
+
+    labels = {}
+    for feat in ("cpu", "mem", "io"):
+        vals = sorted(v[feat] for v in intensities.values())
+        bounds = labeling.usage_intervals(info, feat, vals)
+        for cell, v in intensities.items():
+            labels.setdefault(cell, {})[feat] = \
+                labeling.label_from_bounds(v[feat], bounds)
+
+    # phase 3: score-based placement
+    print("\ncell placements (labels -> preferred pod group):")
+    by_group = {g: [] for g in info.group_nodes}
+    for cell, lab in sorted(labels.items()):
+        order = allocation.priority_groups(info, lab)
+        by_group[order[0]].append(cell)
+    for g, cs in sorted(by_group.items()):
+        kinds = sorted({f"{a}/{s}" for a, s in cs})
+        print(f"  group {info.node_labels[g]} ({len(info.group_nodes[g])} pods) "
+              f"<- {len(cs)} cells")
+        for k in kinds[:6]:
+            print(f"      {k}")
+        if len(kinds) > 6:
+            print(f"      ... +{len(kinds)-6} more")
+
+
+if __name__ == "__main__":
+    main()

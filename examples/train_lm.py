@@ -1,0 +1,24 @@
+"""End-to-end LM training with checkpoint/restart + failure injection.
+
+Trains a reduced llama3-family model on the synthetic pipeline, crashes
+itself at step 60, recovers from the latest checkpoint, and finishes —
+demonstrating the fault-tolerance substrate.  ~2-4 minutes on CPU.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 120]
+"""
+import sys
+import tempfile
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    steps = "120"
+    if "--steps" in sys.argv:
+        steps = sys.argv[sys.argv.index("--steps") + 1]
+    with tempfile.TemporaryDirectory() as d:
+        out = main(["--arch", "llama3.2-3b", "--preset", "small",
+                    "--steps", steps, "--batch", "8", "--seq", "128",
+                    "--ckpt-dir", d, "--ckpt-every", "25", "--async-ckpt",
+                    "--fail-at", "60", "--lr", "3e-3"])
+    assert out["final_loss"] < out["first_loss"] * 0.9, out
+    print("loss decreased through a simulated crash + recovery: OK")

@@ -1,0 +1,23 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    SHAPES,
+    HybridConfig,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    ShapeConfig,
+    cell_is_valid,
+    get_config,
+    get_smoke_config,
+    n_active_params,
+    n_params,
+    skipped_cells,
+    valid_cells,
+)
+
+__all__ = [
+    "ARCH_IDS", "SHAPES", "HybridConfig", "MLAConfig", "ModelConfig",
+    "MoEConfig", "ShapeConfig", "cell_is_valid", "get_config",
+    "get_smoke_config", "n_active_params", "n_params", "skipped_cells",
+    "valid_cells",
+]

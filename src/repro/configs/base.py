@@ -1,0 +1,205 @@
+"""Config system: model architectures, input shapes, and the cell grid.
+
+Every assigned architecture is a ``ModelConfig`` registered under its public id
+(``--arch <id>``).  Input shapes are ``ShapeConfig``s; an (arch x shape) pair is
+a *cell*.  ``valid_cells()`` enumerates the runnable grid, encoding the skips
+documented in DESIGN.md §Arch-applicability (encoder-only archs have no decode
+step; ``long_500k`` needs sub-quadratic attention).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    every: int = 1                   # MoE on every k-th layer (llama4: 2)
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    group_size: int = 512            # tokens per dispatch group (Switch-style)
+    router_aux_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style)."""
+    q_lora_rank: int
+    kv_lora_rank: int
+    qk_nope_dim: int
+    qk_rope_dim: int
+    v_head_dim: int
+
+
+@dataclass(frozen=True)
+class HybridConfig:
+    """RecurrentGemma-style block pattern: groups of (rec, rec, local-attn)."""
+    rnn_width: int
+    local_window: int
+    conv_width: int = 4
+    # n_layers = 3*n_blocks + n_tail_recurrent (tail layers are recurrent)
+    pattern: tuple = ("rglru", "rglru", "attn")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | vlm | audio | ssm | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    # attention flavour
+    attn_kind: str = "gqa"           # gqa | mla | none | hybrid
+    qk_norm: bool = False
+    causal: bool = True              # False for encoder-only
+    rope_theta: float = 500_000.0
+    tie_embeddings: bool = False
+    # family-specific sub-configs
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    # modality frontend stub: tokens | embeddings | tokens+patches
+    input_mode: str = "tokens"
+    n_patches: int = 0               # for tokens+patches, patches prepended
+    # performance / distribution knobs (overridable per cell by the launcher)
+    remat: str = "full"              # none | dots | full
+    param_sharding: str = "tp"       # tp | fsdp  (fsdp = ZeRO-3-style extra shard)
+    optimizer: str = "adamw"         # adamw | adafactor
+    attn_chunk: int = 1024           # q-chunk for flash-style jnp attention
+    scan_layers: bool = True
+    # TP alignment padding (set per-cell by the launcher; 0 = unpadded).
+    # Padded head/vocab slots hold zero weights and are masked out of every
+    # output, so the math is exactly the unpadded architecture — the waste is
+    # explicit and shows up in the roofline MODEL_FLOPS/HLO_FLOPS ratio.
+    attn_layout: str = "plain"       # plain (repeat kv) | grouped (kv-major)
+    pad_heads_to: int = 0
+    pad_kv_to: int = 0
+    vocab_pad_to: int = 0
+    # Megatron-SP-style activation sharding: the residual stream between
+    # layers is sharded over `act_sp` (sequence dim) x `act_dp` (batch dim),
+    # collapsing the O(L * B * S * D) backward stash by the TP degree.  Set by
+    # the launcher (needs a mesh context); empty = off (single-device tests).
+    act_dp: tuple = ()
+    act_sp: str = ""
+    tp_axis: str = ""                # mesh axis for TP head/ff sharding hints
+    microbatches: int = 1            # gradient-accumulation microbatches
+    # capability flags (drive the cell grid)
+    supports_decode: bool = True
+    subquadratic: bool = False
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = ""          # "" -> param_dtype; set for fp8 serving
+    cache_dtype: str = ""            # "" -> param_dtype (KV/state cache)
+    mla_absorb: bool = False         # DeepSeek-style absorbed MLA decode
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def with_overrides(self, **kw) -> "ModelConfig":
+        return replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+ARCH_IDS = [
+    "llama3.2-3b",
+    "mistral-large-123b",
+    "minicpm3-4b",
+    "qwen3-4b",
+    "llama4-maverick-400b-a17b",
+    "granite-moe-1b-a400m",
+    "phi-3-vision-4.2b",
+    "hubert-xlarge",
+    "rwkv6-7b",
+    "recurrentgemma-2b",
+]
+
+_MODULE_FOR_ARCH = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULE_FOR_ARCH:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f"repro.configs.{_MODULE_FOR_ARCH[arch]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    mod = importlib.import_module(f"repro.configs.{_MODULE_FOR_ARCH[arch]}")
+    return mod.SMOKE_CONFIG
+
+
+def cell_is_valid(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Returns (valid, reason-if-skipped)."""
+    if shape.kind == "decode" and not cfg.supports_decode:
+        return False, "encoder-only arch has no decode step"
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "long_500k needs sub-quadratic attention (DESIGN.md)"
+    return True, ""
+
+
+def valid_cells() -> list[tuple[str, str]]:
+    out = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            ok, _ = cell_is_valid(cfg, shape)
+            if ok:
+                out.append((arch, sname))
+    return out
+
+
+def skipped_cells() -> list[tuple[str, str, str]]:
+    out = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            ok, why = cell_is_valid(cfg, shape)
+            if not ok:
+                out.append((arch, sname, why))
+    return out
+
+
+def n_params(cfg: ModelConfig) -> int:
+    """Exact parameter count of the *unpadded* architecture (used for 6ND
+    MODEL_FLOPS).  Delegates to an eval_shape of the real initializer."""
+    from repro.models.model import count_params  # lazy: avoid import cycle
+    base = dataclasses.replace(cfg, pad_heads_to=0, pad_kv_to=0,
+                               vocab_pad_to=0)
+    return count_params(base)
+
+
+def n_active_params(cfg: ModelConfig) -> int:
+    """Active params per token (MoE: routed top-k + shared only)."""
+    if cfg.family != "moe":
+        return n_params(cfg)
+    m = cfg.moe
+    full = n_params(cfg)
+    n_moe_layers = cfg.n_layers // m.every
+    inactive = (m.n_experts - m.top_k) * 3 * cfg.d_model * m.d_ff_expert * n_moe_layers
+    return full - inactive
+
+

@@ -1,0 +1,34 @@
+"""granite-moe-1b-a400m — MoE decoder, 32 experts top-8.
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]
+"""
+from repro.configs.base import MoEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=512,
+    vocab=49155,
+    moe=MoEConfig(
+        n_experts=32,
+        top_k=8,
+        d_ff_expert=512,
+        n_shared_experts=0,
+        capacity_factor=1.25,
+        group_size=512,
+    ),
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    remat="full",
+    microbatches=4,
+)
+
+SMOKE_CONFIG = CONFIG.with_overrides(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=96, vocab=512, remat="none",
+    moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=96, group_size=64),
+)

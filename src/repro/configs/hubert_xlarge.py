@@ -1,0 +1,30 @@
+"""hubert-xlarge — encoder-only audio transformer (w2v2 architecture); the CNN
+feature extractor is stubbed (input_specs() provides frame embeddings).
+[arXiv:2106.07447; unverified]
+
+Encoder-only: bidirectional attention, no decode step (decode_32k / long_500k
+cells are skipped, DESIGN.md §Arch-applicability).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    family="audio",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=80,
+    d_ff=5120,
+    vocab=504,                       # cluster-target inventory
+    causal=False,
+    supports_decode=False,
+    input_mode="embeddings",
+    remat="full",
+    microbatches=2,
+)
+
+SMOKE_CONFIG = CONFIG.with_overrides(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+    d_ff=192, vocab=64, remat="none",
+)

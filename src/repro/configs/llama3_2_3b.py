@@ -1,0 +1,22 @@
+"""llama3.2-3b — dense decoder, GQA. [hf:meta-llama/Llama-3.2-1B family; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-3b",
+    family="dense",
+    n_layers=28,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab=128256,
+    rope_theta=500_000.0,
+    tie_embeddings=True,
+    remat="full",
+)
+
+SMOKE_CONFIG = CONFIG.with_overrides(
+    n_layers=2, d_model=96, n_heads=6, n_kv_heads=2, head_dim=16,
+    d_ff=256, vocab=512, remat="none",
+)

@@ -1,0 +1,41 @@
+"""llama4-maverick-400b-a17b — MoE decoder, 128 routed experts top-1 + 1 shared,
+GQA, early-fusion multimodal (frontend stubbed per the assignment).
+[hf:meta-llama/Llama-4-Scout-17B-16E family; unverified]
+
+~400B total / ~17B active: FSDP param sharding + Adafactor + full remat.
+Experts are sharded over the ``model`` mesh axis (expert parallelism).
+"""
+from repro.configs.base import MoEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,                       # shared-expert / dense dims
+    vocab=202048,
+    moe=MoEConfig(
+        n_experts=128,
+        top_k=1,
+        d_ff_expert=8192,
+        n_shared_experts=1,
+        capacity_factor=1.25,
+        group_size=1024,
+        every=2,                     # MoE on alternate layers (real Maverick)
+    ),
+    rope_theta=500_000.0,
+    remat="full",
+    param_sharding="fsdp",
+    optimizer="adafactor",
+    microbatches=4,
+)
+
+SMOKE_CONFIG = CONFIG.with_overrides(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab=512, remat="none", param_sharding="tp",
+    moe=MoEConfig(n_experts=4, top_k=1, d_ff_expert=128,
+                  n_shared_experts=1, group_size=64, every=2),
+)

@@ -1,0 +1,32 @@
+"""minicpm3-4b — dense decoder with Multi-head Latent Attention. [hf:openbmb/MiniCPM3-4B; hf]"""
+from repro.configs.base import MLAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b",
+    family="dense",
+    n_layers=62,
+    d_model=2560,
+    n_heads=40,
+    n_kv_heads=40,
+    head_dim=96,                  # qk_nope + qk_rope
+    d_ff=6400,
+    vocab=73448,
+    attn_kind="mla",
+    mla=MLAConfig(
+        q_lora_rank=768,
+        kv_lora_rank=256,
+        qk_nope_dim=64,
+        qk_rope_dim=32,
+        v_head_dim=64,
+    ),
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    remat="full",
+)
+
+SMOKE_CONFIG = CONFIG.with_overrides(
+    n_layers=2, d_model=96, n_heads=4, n_kv_heads=4, head_dim=24,
+    d_ff=192, vocab=512, remat="none",
+    mla=MLAConfig(q_lora_rank=48, kv_lora_rank=32, qk_nope_dim=16,
+                  qk_rope_dim=8, v_head_dim=16),
+)

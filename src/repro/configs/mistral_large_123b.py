@@ -1,0 +1,28 @@
+"""mistral-large-123b — dense decoder, GQA. [hf:mistralai/Mistral-Large-Instruct-2407; unverified]
+
+123B params: FSDP param sharding + Adafactor + full remat so the train cell fits
+v5e HBM (see DESIGN.md / EXPERIMENTS.md §Dry-run).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mistral-large-123b",
+    family="dense",
+    n_layers=88,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab=32768,
+    rope_theta=1_000_000.0,
+    remat="full",
+    param_sharding="fsdp",
+    optimizer="adafactor",
+    microbatches=4,
+)
+
+SMOKE_CONFIG = CONFIG.with_overrides(
+    n_layers=3, d_model=128, n_heads=8, n_kv_heads=2, head_dim=16,
+    d_ff=384, vocab=512, remat="none", param_sharding="tp",
+)

@@ -1,0 +1,26 @@
+"""phi-3-vision-4.2b — phi3-mini backbone + CLIP frontend (stubbed: the
+assignment provides precomputed patch embeddings via input_specs()).
+[hf:microsoft/Phi-3-vision-128k-instruct; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b",
+    family="vlm",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=96,
+    d_ff=8192,
+    vocab=32064,
+    input_mode="tokens+patches",
+    n_patches=576,                   # 24x24 CLIP-L grid, projected to d_model
+    rope_theta=10_000.0,
+    remat="full",
+)
+
+SMOKE_CONFIG = CONFIG.with_overrides(
+    n_layers=2, d_model=96, n_heads=4, n_kv_heads=4, head_dim=24,
+    d_ff=256, vocab=512, n_patches=8, remat="none",
+)

@@ -1,0 +1,23 @@
+"""qwen3-4b — dense decoder, GQA + per-head QK-RMSNorm. [hf:Qwen/Qwen3-8B family; hf]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-4b",
+    family="dense",
+    n_layers=36,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=9728,
+    vocab=151936,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    remat="full",
+)
+
+SMOKE_CONFIG = CONFIG.with_overrides(
+    n_layers=2, d_model=96, n_heads=4, n_kv_heads=2, head_dim=24,
+    d_ff=256, vocab=512, remat="none",
+)

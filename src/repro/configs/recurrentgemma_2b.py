@@ -1,0 +1,33 @@
+"""recurrentgemma-2b (Griffin) — RG-LRU recurrent blocks + local attention, 1:2
+attention:recurrent ratio. [arXiv:2402.19427; hf]
+
+26 layers = 8 x (rglru, rglru, local-attn) + 2 tail rglru layers.
+Sub-quadratic: local attention window 2048 -> runs long_500k.
+"""
+from repro.configs.base import HybridConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    n_kv_heads=1,                    # MQA local attention
+    head_dim=256,
+    d_ff=7680,
+    vocab=256000,
+    attn_kind="hybrid",
+    hybrid=HybridConfig(rnn_width=2560, local_window=2048, conv_width=4),
+    subquadratic=True,
+    tie_embeddings=True,
+    rope_theta=10_000.0,
+    remat="full",
+    microbatches=2,
+)
+
+SMOKE_CONFIG = CONFIG.with_overrides(
+    n_layers=5,                      # 1 block + 2 tail recurrent layers
+    d_model=64, n_heads=2, n_kv_heads=1, head_dim=32,
+    d_ff=192, vocab=512, remat="none",
+    hybrid=HybridConfig(rnn_width=64, local_window=16, conv_width=4),
+)

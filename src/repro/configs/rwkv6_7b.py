@@ -1,0 +1,27 @@
+"""rwkv6-7b (Finch) — attention-free RNN with data-dependent decay.
+[arXiv:2404.05892; hf]
+
+Sub-quadratic: runs the long_500k cell (decode state is O(1) in context length).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=64,                      # d_model / head_dim WKV heads
+    n_kv_heads=64,
+    head_dim=64,
+    d_ff=14336,
+    vocab=65536,
+    attn_kind="none",
+    subquadratic=True,
+    remat="full",
+    microbatches=2,
+)
+
+SMOKE_CONFIG = CONFIG.with_overrides(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+    d_ff=192, vocab=512, remat="none",
+)

@@ -1,0 +1,49 @@
+"""Phase 3 — adaptive resource allocation (paper §IV-D).
+
+Score for a node-group/task pair:  f(n, t) = sum_k |n_k - t_k| over the
+feature labels.  The minimum-score feasible group wins; ties break to the
+most powerful group (largest label sum); inside a group the least-loaded
+node wins; unlabeled tasks go to the least-loaded feasible node overall.
+
+``score_matrix`` is the vectorised (jnp) form used both here and by the
+fleet-placement layer (many tasks x many groups at once).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.labeling import GroupInfo
+from repro.core.monitor import TASK_FEATURES
+
+
+def score_matrix(group_labels, task_labels) -> jnp.ndarray:
+    """group_labels: (G, q); task_labels: (T, q) -> scores (T, G)."""
+    g = jnp.asarray(group_labels, jnp.float32)
+    t = jnp.asarray(task_labels, jnp.float32)
+    return jnp.sum(jnp.abs(t[:, None, :] - g[None, :, :]), axis=-1)
+
+
+def priority_groups(info: GroupInfo, task_labels: dict) -> list[int]:
+    """Groups ordered by (score asc, power desc) — the paper's priority list."""
+    t = np.array([task_labels[f] for f in TASK_FEATURES], np.float64)
+    g = np.stack([info.labels_vector(gi) for gi in range(info.n_groups)])
+    scores = np.asarray(score_matrix(g, t[None]))[0]
+    return sorted(range(info.n_groups),
+                  key=lambda gi: (scores[gi], -info.group_power[gi]))
+
+
+def pick_node(info: GroupInfo, task_labels, node_load, feasible,
+              rng=None) -> str | None:
+    """node_load: node -> load metric (lower = freer); feasible: node -> bool.
+    Returns the chosen node name or None if nothing is feasible.  Load ties
+    break randomly (rng) so list order never leaks into placement."""
+    tie = (lambda: rng.random()) if rng is not None else (lambda: 0.0)
+    if task_labels is None:         # unknown task -> fair: least-loaded overall
+        cands = [n for n, ok in feasible.items() if ok]
+        return min(cands, key=lambda n: (node_load[n], tie())) if cands else None
+    for g in priority_groups(info, task_labels):
+        cands = [n for n in info.group_nodes[g] if feasible.get(n)]
+        if cands:
+            return min(cands, key=lambda n: (node_load[n], tie()))
+    return None

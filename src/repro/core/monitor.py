@@ -1,0 +1,95 @@
+"""Phase 2.1 — dynamic task monitoring (paper §IV-C / §V-A-b).
+
+The paper intercepts Nextflow's ps-based trace and stores per-task resource
+usage in PostgreSQL with materialized views.  Here: an in-process trace store
+with incrementally-maintained per-(workflow, task, feature) aggregates
+(the materialized-view stand-in), JSON-persistable so schedulers across runs
+share history (paper A3: workflows are executed repeatedly).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections import defaultdict
+from typing import Optional
+
+TASK_FEATURES = ("cpu", "mem", "io")     # %cores*100, GB resident, MB moved
+
+
+@dataclasses.dataclass
+class TaskTrace:
+    workflow: str
+    task_name: str                        # abstract task (recurring key)
+    instance: str
+    run_id: int
+    node: str
+    runtime_s: float
+    usage: dict                           # TASK_FEATURES -> measured value
+
+
+class TraceDB:
+    def __init__(self):
+        self.records: list[TaskTrace] = []
+        # materialized aggregates: (wf, task, feature) -> [count, total]
+        self._agg = defaultdict(lambda: [0, 0.0])
+        self._runtime_agg = defaultdict(lambda: [0, 0.0])
+        self._runtimes = defaultdict(list)
+
+    # -- writes ---------------------------------------------------------
+    def add(self, trace: TaskTrace) -> None:
+        self.records.append(trace)
+        for f in TASK_FEATURES:
+            if f in trace.usage:
+                a = self._agg[(trace.workflow, trace.task_name, f)]
+                a[0] += 1
+                a[1] += float(trace.usage[f])
+        r = self._runtime_agg[(trace.workflow, trace.task_name)]
+        r[0] += 1
+        r[1] += trace.runtime_s
+        self._runtimes[(trace.workflow, trace.task_name)].append(trace.runtime_s)
+
+    def clear(self) -> None:
+        self.__init__()
+
+    # -- reads (the scheduler-facing 'views') ----------------------------
+    def has_history(self, workflow: str, task_name: str) -> bool:
+        return self._runtime_agg[(workflow, task_name)][0] > 0
+
+    def mean_usage(self, workflow: str, task_name: str, feature: str) -> Optional[float]:
+        c, s = self._agg[(workflow, task_name, feature)]
+        return (s / c) if c else None
+
+    def mean_runtime(self, workflow: str, task_name: str) -> Optional[float]:
+        c, s = self._runtime_agg[(workflow, task_name)]
+        return (s / c) if c else None
+
+    def runtime_quantile(self, workflow: str, task_name: str, q: float) -> Optional[float]:
+        xs = sorted(self._runtimes[(workflow, task_name)])
+        if not xs:
+            return None
+        i = min(int(q * len(xs)), len(xs) - 1)
+        return xs[i]
+
+    def all_usages(self, workflow: str, feature: str) -> list[float]:
+        """Per-task mean usage over this workflow's historic+active tasks,
+        the distribution the percentile intervals are applied to (§IV-C)."""
+        names = {r.task_name for r in self.records if r.workflow == workflow}
+        out = []
+        for t in sorted(names):
+            u = self.mean_usage(workflow, t, feature)
+            if u is not None:
+                out.append(u)
+        return out
+
+    # -- persistence ------------------------------------------------------
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump([dataclasses.asdict(r) for r in self.records], f)
+
+    @classmethod
+    def load(cls, path: str) -> "TraceDB":
+        db = cls()
+        with open(path) as f:
+            for rec in json.load(f):
+                db.add(TaskTrace(**rec))
+        return db

@@ -1,0 +1,156 @@
+"""The five schedulers of the evaluation (§V-E-a).
+
+Baselines: Round-Robin (default Kubernetes behaviour), Fair (YARN/Slurm-style
+least-reserved), Fill-Nodes (pack a node before moving on), and SJFN
+(shortest job -> fastest node, fed by the same monitoring data Tarema uses).
+Tarema: phase-1 profiling groups + phase-2 task labels + phase-3 scoring
+allocation, falling back to fair placement for unknown tasks.
+
+Interface consumed by workflow.engine.Engine:
+    order(queue, db) -> reordered queue
+    select_node(task, nodes, feasible, db) -> node name | None
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import allocation, labeling
+from repro.core.clustering import choose_k
+from repro.core.monitor import TraceDB
+from repro.core.profiler import NodeProfile, profile_cluster_synthetic
+
+
+class Scheduler:
+    name = "base"
+
+    def order(self, queue, db: TraceDB):
+        return queue
+
+    def select_node(self, task, nodes, feasible, db: TraceDB):
+        raise NotImplementedError
+
+
+class RoundRobinScheduler(Scheduler):
+    """Cycle through the (shuffled) node list; skip infeasible nodes."""
+    name = "roundrobin"
+
+    def __init__(self, node_names, seed: int = 0):
+        self.nodes = list(node_names)
+        np.random.default_rng(seed).shuffle(self.nodes)
+        self._i = 0
+
+    def select_node(self, task, nodes, feasible, db):
+        for k in range(len(self.nodes)):
+            cand = self.nodes[(self._i + k) % len(self.nodes)]
+            if feasible.get(cand):
+                self._i = (self._i + k + 1) % len(self.nodes)
+                return cand
+        return None
+
+
+class FairScheduler(Scheduler):
+    """Least-reserved node first (YARN fair / Slurm default flavour).
+    Ties break randomly — the paper shuffles node lists between runs so no
+    scheduler is accidentally speed-aware through list order."""
+    name = "fair"
+
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+
+    def select_node(self, task, nodes, feasible, db):
+        cands = [n for n, ok in feasible.items() if ok]
+        if not cands:
+            return None
+        return min(cands, key=lambda n: (nodes[n].load(), self.rng.random()))
+
+
+class FillNodesScheduler(Scheduler):
+    """Fully claim a node before assigning to the next one in the list."""
+    name = "fillnodes"
+
+    def __init__(self, node_names, seed: int = 0):
+        self.nodes = list(node_names)
+        np.random.default_rng(seed).shuffle(self.nodes)
+
+    def select_node(self, task, nodes, feasible, db):
+        # prefer partially-filled feasible nodes, then list order
+        for cand in sorted(self.nodes,
+                           key=lambda n: (nodes[n].free_cores == nodes[n].spec.cores,
+                                          self.nodes.index(n))):
+            if feasible.get(cand):
+                return cand
+        return None
+
+
+class _ProfiledScheduler(Scheduler):
+    """Shared phase-1 state: profiles, groups, labels."""
+
+    def __init__(self, specs, seed: int = 0):
+        self.profiles: list[NodeProfile] = profile_cluster_synthetic(specs, seed)
+        X = np.stack([p.vector() for p in self.profiles])
+        self.grouping = choose_k(X, k_max=6)
+        self.info = labeling.build_group_info(self.profiles, self.grouping["labels"])
+        # fastest-first node order by measured cpu speed (for SJFN)
+        self.by_speed = [p.node for p in
+                         sorted(self.profiles, key=lambda p: -p.features["cpu"])]
+
+
+class SJFNScheduler(_ProfiledScheduler):
+    """Shortest-Job-Fastest-Node: order the queue by estimated runtime
+    (historic mean from the monitor), place on the fastest feasible node.
+    Nodes of the same machine type benchmark identically, so speed ties
+    break to the least-loaded node (then randomly)."""
+    name = "sjfn"
+
+    def __init__(self, specs, seed: int = 0):
+        super().__init__(specs, seed)
+        self.rng = np.random.default_rng(seed + 2)
+        self.speed = {p.node: p.features["cpu"] for p in self.profiles}
+
+    def order(self, queue, db):
+        def est(t):
+            r = db.mean_runtime(t.workflow, t.name)
+            return r if r is not None else float("inf")
+        return sorted(queue, key=est)
+
+    def select_node(self, task, nodes, feasible, db):
+        cands = [n for n, ok in feasible.items() if ok]
+        if not cands:
+            return None
+        # fastest first; equal-speed (same machine type) -> least loaded
+        return min(cands, key=lambda n: (-round(self.speed[n], -1),
+                                         nodes[n].load(), self.rng.random()))
+
+
+class TaremaScheduler(_ProfiledScheduler):
+    """Phase 3: score-based group allocation, least-loaded node in group,
+    fair fallback for unknown tasks (paper §IV-D)."""
+    name = "tarema"
+
+    def __init__(self, specs, seed: int = 0):
+        super().__init__(specs, seed)
+        self.rng = np.random.default_rng(seed + 1)
+
+    def select_node(self, task, nodes, feasible, db):
+        labels = labeling.label_task(db, self.info, task.workflow, task.name)
+        load = {n: nodes[n].load() for n in nodes}
+        return allocation.pick_node(self.info, labels, load, feasible, self.rng)
+
+
+def make_scheduler(name: str, specs, seed: int = 0) -> Scheduler:
+    names = [s.name for s in specs]
+    if name == "roundrobin":
+        return RoundRobinScheduler(names, seed)
+    if name == "fair":
+        return FairScheduler(seed)
+    if name == "fillnodes":
+        return FillNodesScheduler(names, seed)
+    if name == "sjfn":
+        return SJFNScheduler(specs, seed)
+    if name == "tarema":
+        return TaremaScheduler(specs, seed)
+    raise ValueError(name)
+
+
+SCHEDULERS = ("roundrobin", "fair", "fillnodes", "sjfn", "tarema")
+BASELINES = ("roundrobin", "fair", "fillnodes")

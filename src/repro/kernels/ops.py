@@ -1,0 +1,59 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True on CPU hosts (this container) and False on
+TPU; the wrappers reshape model-layout tensors into kernel layouts (heads
+flattened into batch, GQA kv repetition, gate precomputation for RG-LRU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import kmeans as _km
+from repro.kernels import rglru_scan as _rg
+from repro.kernels import rwkv6_scan as _wkv
+
+
+def _default_interpret() -> bool:
+    return jax.devices()[0].platform != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 256,
+                    block_k: int = 256, interpret: bool | None = None):
+    """q: (B,S,H,hd); k,v: (B,S,KV,hd).  Returns (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    out = _fa.flash_attention(
+        fold(q), fold(k), fold(v), causal=causal, block_q=block_q,
+        block_k=block_k,
+        interpret=_default_interpret() if interpret is None else interpret)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+
+
+def wkv6(r, k, v, w, u, *, chunk: int = 64, interpret: bool | None = None):
+    """r,k,v,w: (B,S,H,hd); u: (H,hd).  Returns (B,S,H,hd)."""
+    B, S, H, hd = r.shape
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    ub = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, hd)
+    out = _wkv.wkv6_scan(
+        fold(r), fold(k), fold(v), fold(w), ub, chunk=min(chunk, S),
+        interpret=_default_interpret() if interpret is None else interpret)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+
+
+def rglru(a, g, *, interpret: bool | None = None):
+    """a, g: (B,S,R) -> (B,S,R)."""
+    return _rg.rglru_scan(
+        a, g, chunk=min(128, a.shape[1]), block_r=min(512, a.shape[2]),
+        interpret=_default_interpret() if interpret is None else interpret)
+
+
+def kmeans_assign(x, c, *, interpret: bool | None = None):
+    return _km.kmeans_assign(
+        x, c, block_n=min(1024, x.shape[0]),
+        interpret=_default_interpret() if interpret is None else interpret)

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth the
+tests assert against, shape/dtype-swept)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention(q, k, v, *, causal: bool = True):
+    """q,k,v: (BH, S, hd)."""
+    S = q.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (q.shape[-1] ** -0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def wkv6(r, k, v, w, u):
+    """r,k,v,w: (BH, S, hd); u: (BH, hd)."""
+    rf, kf, vf, wf, uf = (t.astype(jnp.float32) for t in (r, k, v, w, u))
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp
+        y = jnp.sum(rt * uf * kt, axis=-1, keepdims=True) * vt \
+            + jnp.einsum("bk,bkv->bv", rt, s)
+        s = wt[..., None] * s + kt[..., None] * vt[..., None, :]
+        return s, y
+
+    BH, S, hd = r.shape
+    s0 = jnp.zeros((BH, hd, hd), jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, wf))
+    _, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype)
+
+
+def rglru_scan(a, g):
+    """a, g: (B, S, R)."""
+    def step(h, inp):
+        at, gt = inp
+        h = at * h + gt
+        return h, h
+
+    B, S, R = a.shape
+    h0 = jnp.zeros((B, R), jnp.float32)
+    xs = (jnp.moveaxis(a.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(g.astype(jnp.float32), 1, 0))
+    _, hs = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(hs, 0, 1).astype(a.dtype)
+
+
+def kmeans_assign(x, c):
+    xf, cf = x.astype(jnp.float32), c.astype(jnp.float32)
+    d = (jnp.sum(xf * xf, axis=1)[:, None] + jnp.sum(cf * cf, axis=1)[None, :]
+         - 2.0 * xf @ cf.T)
+    return jnp.argmin(d, axis=1).astype(jnp.int32), jnp.min(d, axis=1)

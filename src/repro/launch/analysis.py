@@ -1,0 +1,258 @@
+"""Roofline accounting (EXPERIMENTS.md §Roofline).
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified on
+this container), so scan-over-layers programs under-report FLOPs by ~L.  This
+module instead walks the *jaxpr* of each cell's step function — multiplying
+scan bodies by their trip counts — giving exact dense-algebra FLOPs including
+the backward pass, remat recompute, and microbatching.
+
+Three outputs per cell:
+  * flops            — exact dot_general FLOPs + elementwise/reduce ops
+  * bytes_min        — minimum HBM traffic: dot operands/results +
+                       gather/scatter (KV-cache) traffic, i.e. assuming
+                       perfect elementwise fusion
+  * collective model — per-device collective bytes from the sharding scheme
+                       (Megatron-style TP/SP per-layer terms, DP/FSDP grad
+                       terms, MoE all-to-all), since SPMD HLO text shows
+                       collectives inside while bodies only once as well.
+
+The counters run on the *unsharded* model functions (sharding constraints are
+disabled), which is FLOP-identical; per-device numbers divide by chip count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (ModelConfig, ShapeConfig, n_active_params,
+                                n_params)
+from repro.models import model as M
+from repro.models.layers import eff_heads
+from repro.train.optimizer import make_optimizer
+from repro.train.step import make_prefill_step, make_serve_step, make_train_step
+
+ELEMENTWISE = {
+    "add", "sub", "mul", "div", "max", "min", "pow", "neg", "exp", "log",
+    "tanh", "logistic", "rsqrt", "sqrt", "erf", "integer_pow", "abs", "sign",
+    "floor", "ceil", "round", "rem", "and", "or", "not", "xor", "select_n",
+    "clamp", "nextafter", "cbrt", "expm1", "log1p", "square", "cos", "sin",
+}
+REDUCE = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+          "reduce_and", "reduce_or", "argmax", "argmin", "cumsum",
+          "cumlogsumexp", "cummax", "cumprod"}
+MOVE = {"gather", "scatter", "scatter-add", "scatter_add", "dynamic_slice",
+        "dynamic_update_slice"}
+CALLS = {"pjit", "closed_call", "custom_jvp_call", "custom_vjp_call",
+         "custom_vjp_call_jaxpr", "remat", "checkpoint", "remat2",
+         "custom_lin"}
+
+
+def _nbytes(aval) -> int:
+    return int(np.prod(aval.shape, dtype=np.int64)) * aval.dtype.itemsize \
+        if hasattr(aval, "shape") else 0
+
+
+def _size(aval) -> int:
+    return int(np.prod(aval.shape, dtype=np.int64)) if hasattr(aval, "shape") else 0
+
+
+@dataclasses.dataclass
+class Counts:
+    dot_flops: float = 0.0
+    ew_flops: float = 0.0
+    dot_bytes: float = 0.0
+    move_bytes: float = 0.0
+
+    @property
+    def flops(self):
+        return self.dot_flops + self.ew_flops
+
+    @property
+    def bytes_min(self):
+        return self.dot_bytes + self.move_bytes
+
+    def scaled(self, k: float) -> "Counts":
+        return Counts(self.dot_flops * k, self.ew_flops * k,
+                      self.dot_bytes * k, self.move_bytes * k)
+
+    def __iadd__(self, o: "Counts"):
+        self.dot_flops += o.dot_flops
+        self.ew_flops += o.ew_flops
+        self.dot_bytes += o.dot_bytes
+        self.move_bytes += o.move_bytes
+        return self
+
+
+def count_jaxpr(jaxpr) -> Counts:
+    c = Counts()
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "dot_general":
+            (lc, rc), _ = eqn.params["dimension_numbers"]
+            lhs = eqn.invars[0].aval
+            out = eqn.outvars[0].aval
+            k = int(np.prod([lhs.shape[d] for d in lc], dtype=np.int64)) or 1
+            c.dot_flops += 2.0 * _size(out) * k
+            c.dot_bytes += (_nbytes(lhs) + _nbytes(eqn.invars[1].aval)
+                            + _nbytes(out))
+        elif name == "scan":
+            body = count_jaxpr(eqn.params["jaxpr"].jaxpr)
+            c += body.scaled(eqn.params["length"])
+        elif name == "while":
+            c += count_jaxpr(eqn.params["body_jaxpr"].jaxpr)  # trip unknown
+        elif name == "cond":
+            branches = [count_jaxpr(b.jaxpr) for b in eqn.params["branches"]]
+            best = max(branches, key=lambda b: b.flops)
+            c += best
+        elif name in CALLS:
+            inner = (eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+                     or eqn.params.get("fun_jaxpr"))
+            if inner is not None:
+                c += count_jaxpr(inner.jaxpr if hasattr(inner, "jaxpr") else inner)
+        elif name in ELEMENTWISE:
+            c.ew_flops += _size(eqn.outvars[0].aval)
+        elif name in REDUCE:
+            c.ew_flops += _size(eqn.invars[0].aval)
+        elif name in MOVE:
+            c.move_bytes += min((_nbytes(v.aval) for v in eqn.outvars), default=0)
+            if "update" in name or "scatter" in name:
+                c.move_bytes += _nbytes(eqn.invars[-1].aval)
+    return c
+
+
+def count_cell(cfg: ModelConfig, shape: ShapeConfig,
+               num_microbatches: int = 0) -> Counts:
+    """Trace the cell's step function (no sharding) and count it."""
+    cfg = cfg.with_overrides(act_dp=(), act_sp="", tp_axis="")
+    nm = num_microbatches or cfg.microbatches
+    B, S = shape.global_batch, shape.seq_len
+    p_shapes = jax.eval_shape(lambda: M.init_params(cfg, jax.random.key(0)))
+
+    def batch_specs():
+        f = jax.ShapeDtypeStruct
+        if cfg.input_mode == "embeddings":
+            out = {"frames": f((B, S, cfg.d_model), jnp.float32)}
+            if shape.kind == "train":
+                out["labels"] = f((B, S), jnp.int32)
+            return out
+        if cfg.input_mode == "tokens+patches":
+            Pp = cfg.n_patches
+            out = {"tokens": f((B, S - Pp), jnp.int32),
+                   "patches": f((B, Pp, cfg.d_model), jnp.float32)}
+            if shape.kind == "train":
+                out["labels"] = f((B, S - Pp), jnp.int32)
+            return out
+        out = {"tokens": f((B, S), jnp.int32)}
+        if shape.kind == "train":
+            out["labels"] = f((B, S), jnp.int32)
+        return out
+
+    if shape.kind == "train":
+        opt = make_optimizer(cfg.optimizer, lr=3e-4)
+        o_shapes = jax.eval_shape(opt.init, p_shapes)
+        fn = make_train_step(cfg, opt, num_microbatches=nm)
+        jx = jax.make_jaxpr(fn)(p_shapes, o_shapes, batch_specs())
+    elif shape.kind == "prefill":
+        fn = make_prefill_step(cfg)
+        jx = jax.make_jaxpr(fn)(p_shapes, batch_specs())
+    else:
+        s_shapes = jax.eval_shape(
+            functools.partial(M.init_decode_state, cfg, B, S))
+        fn = make_serve_step(cfg)
+        jx = jax.make_jaxpr(fn)(p_shapes, s_shapes,
+                                jax.ShapeDtypeStruct((B, 1), jnp.int32))
+    return count_jaxpr(jx.jaxpr)
+
+
+# ------------------------------------------------------------ MODEL_FLOPS
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6*N*D (train) / 2*N*D (inference) + exact-ish attention terms, on the
+    UNPADDED architecture.  The useful-work yardstick for the roofline ratio."""
+    N = n_active_params(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    hd = cfg.resolved_head_dim
+    H = cfg.n_heads
+    if cfg.family == "hybrid":
+        L_attn = cfg.n_layers // 3
+        window = cfg.hybrid.local_window
+    elif cfg.attn_kind == "none":
+        L_attn, window = 0, 0
+    else:
+        L_attn, window = cfg.n_layers, 0
+
+    if shape.kind == "train":
+        tokens = B * S
+        flops = 6.0 * N * tokens
+        if L_attn:
+            eff = min(window, S) if window else S
+            flops += 6.0 * L_attn * B * S * eff * H * hd  # causal ~ S/2 * 12
+        return flops
+    if shape.kind == "prefill":
+        tokens = B * S
+        flops = 2.0 * N * tokens
+        if L_attn:
+            eff = min(window, S) if window else S
+            flops += 2.0 * L_attn * B * S * eff * H * hd
+        return flops
+    # decode: one token against an S-long context
+    flops = 2.0 * N * B
+    if L_attn:
+        eff = min(window, S) if window else S
+        flops += 4.0 * L_attn * B * eff * H * hd
+    return flops
+
+
+# --------------------------------------------------------- collective model
+
+def collective_model(cfg: ModelConfig, shape: ShapeConfig, *, tp: int = 16,
+                     dp: int = 16, pods: int = 1) -> dict:
+    """Per-device collective bytes per step, from the sharding scheme.
+
+    Megatron-style accounting: TP/SP costs 4 (AG|RS) ops of the local
+    activation slab per layer forward, doubled for backward; DP costs a
+    ring all-reduce of the local grad shard (2x) or, under FSDP, 2 AGs + 1 RS
+    of the local param shard; MoE adds dispatch/combine all-to-alls.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.param_dtype).itemsize
+    if cfg.param_sharding == "replicate":
+        dp, tp = dp * tp, 1        # every axis is a batch axis
+    dpt = dp * pods
+    B_loc = max(B // dpt, 1)
+    D, L = cfg.d_model, cfg.n_layers
+    P_bytes = n_params(cfg) * dt
+    out = {"tp": 0.0, "dp": 0.0, "ep": 0.0, "note": ""}
+
+    if shape.kind == "train":
+        act = B_loc * S * D * dt
+        out["tp"] = 8.0 * L * act * (tp - 1) / tp if tp > 1 else 0.0
+        if cfg.param_sharding == "fsdp":
+            out["dp"] = 3.0 * (P_bytes / tp) * (dpt - 1) / dpt
+        else:
+            out["dp"] = 2.0 * (P_bytes / tp) * (dpt - 1) / dpt
+        if cfg.family == "moe" and tp > 1:
+            tok = B_loc * S
+            out["ep"] = 4.0 * L * tok * D * dt * cfg.moe.top_k * (tp - 1) / tp
+    elif shape.kind == "prefill":
+        act = B_loc * S * D * dt
+        out["tp"] = 4.0 * L * act * (tp - 1) / tp
+        if cfg.param_sharding == "fsdp":
+            out["dp"] = 1.0 * (P_bytes / tp) * (dpt - 1) / dpt
+        if cfg.family == "moe":
+            out["ep"] = 2.0 * L * B_loc * S * D * dt * cfg.moe.top_k * (tp - 1) / tp
+    else:  # decode: one token
+        act = B_loc * 1 * D * dt
+        out["tp"] = 4.0 * L * act * (tp - 1) / tp
+        if cfg.param_sharding == "fsdp":
+            out["dp"] = 1.0 * (P_bytes / tp) * (dpt - 1) / dpt
+            out["note"] = "FSDP param AG dominates decode — see §Perf"
+        if cfg.family == "moe":
+            out["ep"] = 2.0 * L * B_loc * D * dt * cfg.moe.top_k * (tp - 1) / tp
+    out["total"] = out["tp"] + out["dp"] + out["ep"]
+    return out

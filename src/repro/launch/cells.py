@@ -1,0 +1,140 @@
+"""Cell builder: everything needed to lower/compile one (arch x shape x mesh)
+cell — the step function, abstract input specs, and in/out shardings.
+
+Used by the dry-run driver, the roofline harness, and the perf pass (which
+rebuilds cells with config overrides).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (SHAPES, ModelConfig, ShapeConfig,
+                                cell_is_valid, get_config)
+from repro.launch import sharding as SH
+from repro.train.optimizer import make_optimizer
+from repro.train.step import make_prefill_step, make_serve_step, make_train_step
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape_name: str
+    cfg: ModelConfig
+    shape: ShapeConfig
+    mesh: Any
+    fn: Any
+    args: tuple            # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+
+    def lower(self):
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=self.donate_argnums)
+        with self.mesh:
+            return jitted.lower(*self.args)
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def resolve_padding(cfg: ModelConfig, shape: ShapeConfig, mesh) -> dict:
+    return padding_overrides(cfg, shape, mesh.shape.get("model", 1))
+
+
+def padding_overrides(cfg: ModelConfig, shape: ShapeConfig, tp: int) -> dict:
+    """TP-alignment overrides for a cell (see ModelConfig padding fields).
+
+    Layout policy: decode cells of GQA archs use the *grouped* kv-major layout
+    (kv cache must shard over the model axis — replicating it would blow HBM),
+    padding kv heads up to the TP degree; train/prefill cells use the plain
+    layout (repeat-kv) padding q heads, which wastes less compute
+    (e.g. llama3: 24->32 heads = 1.33x attention vs kv 8->16 = 2x).
+    """
+    ov: dict = {}
+    if cfg.vocab % tp:
+        ov["vocab_pad_to"] = _round_up(cfg.vocab, tp)
+    if cfg.attn_kind == "none":
+        return ov
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    if (shape.kind == "decode" and cfg.attn_kind == "gqa" and 1 < KV < H):
+        ov["attn_layout"] = "grouped"
+        if KV % tp:
+            ov["pad_kv_to"] = _round_up(KV, tp)
+    elif H % tp:
+        ov["pad_heads_to"] = _round_up(H, tp)
+    return ov
+
+
+def build_cell(arch: str, shape_name: str, mesh, *,
+               overrides: Optional[dict] = None,
+               num_microbatches: int = 0) -> Cell:
+    from repro.launch.mesh import dp_axes
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    cfg = cfg.with_overrides(**resolve_padding(cfg, shape, mesh))
+    if overrides:
+        cfg = cfg.with_overrides(**overrides)
+    from repro.launch.sharding import _dp, dp_axes_for
+    if cfg.param_sharding == "replicate":
+        # pure-DP: no TP padding, no SP, batch over every axis
+        cfg = cfg.with_overrides(pad_heads_to=0, pad_kv_to=0, vocab_pad_to=0,
+                                 attn_layout="plain", tp_axis="", act_sp="")
+    elif "model" in mesh.axis_names:
+        cfg = cfg.with_overrides(tp_axis="model")
+        if shape.kind == "train" and shape.seq_len % mesh.shape["model"] == 0 \
+                and not cfg.act_sp:
+            # sequence-parallel residual stream (Megatron-SP): collapses the
+            # backward activation stash by the TP degree
+            cfg = cfg.with_overrides(act_sp="model")
+    if _dp(mesh, shape.global_batch, cfg) is not None:
+        # activations batch-sharded over DP axes (the vocab-sharded embedding
+        # gather would otherwise leave them replicated)
+        cfg = cfg.with_overrides(act_dp=dp_axes_for(cfg, mesh))
+    num_microbatches = num_microbatches or cfg.microbatches
+    ok, why = cell_is_valid(cfg, shape)
+    if not ok:
+        raise ValueError(f"cell ({arch},{shape_name}) invalid: {why}")
+
+    p_shapes = SH.param_shapes(cfg)
+    p_sh = SH.param_shardings(cfg, mesh)
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        opt = make_optimizer(cfg.optimizer, lr=3e-4, weight_decay=0.01)
+        o_shapes, o_sh = SH.opt_state_shardings(opt, cfg, mesh, p_shapes, p_sh)
+        b_specs = SH.batch_specs(cfg, shape)
+        b_sh = SH.batch_shardings(cfg, shape, mesh)
+        fn = make_train_step(cfg, opt, num_microbatches=num_microbatches)
+        metrics_sh = {"loss": repl, "grad_norm": repl}
+        return Cell(arch, shape_name, cfg, shape, mesh, fn,
+                    (p_shapes, o_shapes, b_specs), (p_sh, o_sh, b_sh),
+                    (p_sh, o_sh, metrics_sh), (0, 1))
+
+    if shape.kind == "prefill":
+        b_specs = SH.batch_specs(cfg, shape)
+        b_sh = SH.batch_shardings(cfg, shape, mesh)
+        fn = make_prefill_step(cfg)
+        out_sh = SH.logits_sharding(cfg, mesh, shape.global_batch)
+        return Cell(arch, shape_name, cfg, shape, mesh, fn,
+                    (p_shapes, b_specs), (p_sh, b_sh), out_sh, ())
+
+    # decode
+    B = shape.global_batch
+    s_shapes = SH.decode_state_shapes(cfg, B, shape.seq_len)
+    s_sh = SH.decode_state_shardings(cfg, mesh, B)
+    t_spec = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    t_sh = NamedSharding(mesh, P(SH._dp(mesh, B, cfg), None))
+    fn = make_serve_step(cfg)
+    return Cell(arch, shape_name, cfg, shape, mesh, fn,
+                (p_shapes, s_shapes, t_spec), (p_sh, s_sh, t_sh),
+                (t_sh, s_sh), (1,))

@@ -1,0 +1,170 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every valid (architecture x input-shape)
+cell on the production meshes and record memory / cost / collective evidence.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k --multi-pod
+
+Results land in benchmarks/results/dryrun/<mesh>/<arch>__<shape>.json; the
+roofline harness (benchmarks/roofline.py) consumes them.
+
+NOTE: the XLA_FLAGS line above MUST run before any jax import — device count
+is locked at first backend initialisation.  Do not import this module from
+tests (they want the real 1-device CPU platform).
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import ARCH_IDS, SHAPES, cell_is_valid, get_config, skipped_cells
+from repro.launch.cells import build_cell
+from repro.launch.mesh import make_production_mesh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "f64": 8, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s16": 2, "u16": 2}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_schedule(hlo_text: str) -> dict:
+    """Per-partition collective inventory from post-SPMD optimized HLO.
+
+    Shapes in SPMD HLO are per-partition; for each collective instruction we
+    take the largest tensor on the defining line (operand or result) as the
+    per-device payload.  ``-done`` halves of async pairs are skipped.  Static
+    counts only: collectives inside while bodies execute once per trip — trip
+    counts are applied analytically in benchmarks/roofline.py (XLA's own
+    cost model has the same single-trip limitation; see EXPERIMENTS.md).
+    """
+    out: dict[str, dict] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if " = " not in line:
+            continue
+        rhs = line.split(" = ", 1)[1]
+        for op in _COLLECTIVES:
+            # match `<shape> op-name(` or `op-name-start(`
+            m = re.search(rf"\b{op}(-start)?\(", rhs)
+            if m and f"{op}-done" not in rhs:
+                sizes = [_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(line)]
+                b = max(sizes) if sizes else 0
+                rec = out.setdefault(op, {"count": 0, "bytes": 0})
+                rec["count"] += 1
+                rec["bytes"] += b
+                break
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             overrides: dict | None = None, save: bool = True,
+             verbose: bool = True) -> dict:
+    mesh_name = "pod512_multi" if multi_pod else "pod256"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "ok": False}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        cell = build_cell(arch, shape_name, mesh, overrides=overrides)
+        lowered = cell.lower()
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        rec.update({
+            "ok": True,
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "peak_device_bytes": mem.argument_size_in_bytes
+                + mem.output_size_in_bytes + mem.temp_size_in_bytes
+                - mem.alias_size_in_bytes,
+            },
+            "xla_cost": {"flops": cost.get("flops", 0.0),
+                         "bytes_accessed": cost.get("bytes accessed", 0.0)},
+            "collectives": collective_schedule(hlo),
+            "hlo_bytes": len(hlo),
+        })
+        if verbose:
+            print(f"[{mesh_name}] {arch} x {shape_name}: OK "
+                  f"(lower {rec['lower_s']}s, compile {rec['compile_s']}s, "
+                  f"peak/device {rec['memory']['peak_device_bytes']/2**30:.2f} GiB)")
+            print(f"  memory_analysis: {mem}")
+            print(f"  cost_analysis: flops={cost.get('flops', 0.0):.3e} "
+                  f"bytes={cost.get('bytes accessed', 0.0):.3e} "
+                  f"(XLA counts while-bodies once; see roofline)")
+            print(f"  collectives: {rec['collectives']}")
+    except Exception as e:  # noqa: BLE001 - record and continue
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[{mesh_name}] {arch} x {shape_name}: FAIL {rec['error']}")
+
+    if save:
+        d = os.path.join(RESULTS_DIR, mesh_name)
+        os.makedirs(d, exist_ok=True)
+        safe = arch.replace("/", "_")
+        with open(os.path.join(d, f"{safe}__{shape_name}.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, "dry-run needs the 512-device host platform"
+
+    cells = []
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+    for arch in archs:
+        cfg = get_config(arch)
+        for s in shapes:
+            ok, why = cell_is_valid(cfg, SHAPES[s])
+            if ok:
+                cells.append((arch, s))
+            else:
+                print(f"skip {arch} x {s}: {why}")
+
+    failures = 0
+    for mp in meshes:
+        for arch, s in cells:
+            rec = run_cell(arch, s, multi_pod=mp)
+            failures += 0 if rec["ok"] else 1
+    print(f"\ndry-run complete: {len(cells) * len(meshes)} cells, "
+          f"{failures} failures; skipped cells: {skipped_cells()}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

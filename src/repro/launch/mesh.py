@@ -1,0 +1,39 @@
+"""Production mesh definitions.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e-256 pod numbers).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis extends
+data parallelism across the inter-pod (DCN/ICI) boundary.
+
+Defined as functions so importing this module never touches jax device state
+(device count is locked at first backend init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary meshes for tests / elastic re-meshing (e.g. (4,2), (2,2,2))."""
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """The data-parallel axes of a mesh (everything named pod/data)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def dp_size(mesh) -> int:
+    size = 1
+    for a in dp_axes(mesh):
+        size *= mesh.shape[a]
+    return size
+
+
+def model_size(mesh) -> int:
+    return mesh.shape.get("model", 1)

@@ -1,0 +1,67 @@
+"""Batched serving driver: prefill a batch of prompts, then decode greedily.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b \
+        --preset small --batch 4 --prompt-len 32 --gen 32
+
+On this CPU container it runs the reduced presets end-to-end; the full-size
+serving cells (32k KV caches, fp8 weights) are exercised via the dry-run and
+the §Perf serving hillclimb (EXPERIMENTS.md iteration 3).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.launch.train import build
+from repro.train.step import make_serve_step
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "small", "full"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args(argv)
+
+    cfg = build(args.preset, args.arch)
+    if not cfg.supports_decode:
+        raise SystemExit(f"{args.arch} is encoder-only; no decode step")
+    params = M.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    B, P = args.batch, args.prompt_len
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (B, P)), jnp.int32)
+
+    max_len = P + args.gen
+    state = M.init_decode_state(cfg, B, max_len)
+    serve = jax.jit(make_serve_step(cfg))
+
+    # prefill via incremental decode (teacher-forced prompt feed); the
+    # full-context prefill path is M.prefill (used by the prefill cells)
+    t0 = time.time()
+    tok = prompts[:, :1]
+    for t in range(P - 1):
+        _, state = serve(params, state, prompts[:, t:t + 1])
+        tok = prompts[:, t + 1:t + 2]
+    out = []
+    for _ in range(args.gen):
+        tok, state = serve(params, state, tok)
+        out.append(tok)
+    gen = jnp.concatenate(out, axis=1)
+    jax.block_until_ready(gen)
+    dt = time.time() - t0
+    toks = B * (P - 1 + args.gen)
+    print(f"served {B} sequences: {args.gen} new tokens each "
+          f"({toks/dt:.1f} tok/s end-to-end on this host)")
+    print("sample generation ids:", np.asarray(gen[0][:16]))
+    return {"tok_per_s": toks / dt, "generated": np.asarray(gen)}
+
+
+if __name__ == "__main__":
+    main()

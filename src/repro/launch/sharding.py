@@ -1,0 +1,224 @@
+"""Logical-axis sharding rules (MaxText-style) and sharding builders for
+params, optimizer state, batches, and decode state.
+
+Mesh axes: ``pod`` (multi-pod DP), ``data`` (DP / FSDP), ``model`` (TP / EP).
+
+Parallelism map:
+  DP    batch over ("pod","data")
+  TP    heads / kv_heads / mlp / rnn / vocab over "model"
+  EP    experts over "model"
+  FSDP  weight "embed" dims additionally over "data" (ZeRO-3-style; enabled
+        per-arch via ModelConfig.param_sharding == "fsdp")
+  SP    sequence over data axes when the batch is not divisible by the DP
+        degree (long-context small-batch fallback)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import dp_axes, dp_size
+from repro.models import model as M
+from repro.train.optimizer import Optimizer
+
+Pytree = Any
+
+TP_RULES: dict[str | None, tuple[str, ...]] = {
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "heads_flat": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "rnn": ("model",),
+    "kv_in": ("model",),
+    "embed": (),
+    "rnn_in": (),
+    "layers": (),
+    None: (),
+}
+
+FSDP_EXTRA = {"embed": ("data",), "rnn_in": ("data",)}
+
+
+def rules_for(cfg: ModelConfig) -> dict:
+    if cfg.param_sharding == "replicate":
+        # pure-DP mode: weights replicated, every mesh axis is a batch axis
+        # (the §Perf fix for small models that are collective-bound under
+        # TP-16: llama3-3B, granite-1B)
+        return {k: () for k in TP_RULES}
+    rules = dict(TP_RULES)
+    if cfg.param_sharding == "fsdp":
+        rules.update(FSDP_EXTRA)
+    return rules
+
+
+def dp_axes_for(cfg: ModelConfig, mesh) -> tuple:
+    axes = dp_axes(mesh)
+    if cfg.param_sharding == "replicate" and "model" in mesh.axis_names:
+        axes = axes + ("model",)
+    return axes
+
+
+def spec_from_axes(axes: tuple, rules: dict, mesh) -> P:
+    parts = []
+    for ax in axes:
+        names = tuple(n for n in rules.get(ax, ()) if n in mesh.axis_names)
+        parts.append(names if len(names) > 1 else (names[0] if names else None))
+    return P(*parts)
+
+
+def param_shardings(cfg: ModelConfig, mesh) -> Pytree:
+    rules = rules_for(cfg)
+    axes = M.param_axes(cfg)
+    return jax.tree.map(
+        lambda a: NamedSharding(mesh, spec_from_axes(a, rules, mesh)),
+        axes, is_leaf=lambda t: isinstance(t, tuple))
+
+
+def param_shapes(cfg: ModelConfig) -> Pytree:
+    return jax.eval_shape(lambda: M.init_params(cfg, jax.random.key(0)))
+
+
+def _repl(mesh):
+    return NamedSharding(mesh, P())
+
+
+def opt_state_shardings(opt: Optimizer, cfg: ModelConfig, mesh,
+                        p_shapes=None, p_shardings=None) -> tuple[Pytree, Pytree]:
+    """Returns (state_shapes, state_shardings).
+
+    AdamW moments reuse parameter shardings (ZeRO follows the FSDP weight
+    sharding automatically).  Adafactor factored stats drop the corresponding
+    parameter axis: vr drops the last, vc the second-to-last.
+    """
+    p_shapes = p_shapes if p_shapes is not None else param_shapes(cfg)
+    p_shardings = p_shardings if p_shardings is not None else param_shardings(cfg, mesh)
+    state_shapes = jax.eval_shape(opt.init, p_shapes)
+    if opt.name == "adamw":
+        sh = {"m": p_shardings, "v": p_shardings, "count": _repl(mesh)}
+        return state_shapes, sh
+
+    stats = _walk_stats(p_shardings, state_shapes["stats"], mesh)
+    return state_shapes, {"stats": stats, "count": _repl(mesh)}
+
+
+def _walk_stats(shardings, shapes, mesh):
+    if isinstance(shapes, dict) and ("vr" in shapes or "v" in shapes):
+        spec = shardings.spec
+        if "vr" in shapes:
+            return {"vr": NamedSharding(mesh, P(*spec[:-1])),
+                    "vc": NamedSharding(mesh, P(*spec[:-2], *spec[-1:]))}
+        return {"v": shardings}
+    return {k: _walk_stats(shardings[k], shapes[k], mesh) for k in shapes}
+
+
+# ------------------------------------------------------------------ batches
+
+def _dp(mesh, batch: int, cfg: ModelConfig | None = None):
+    """DP axes if the batch divides the DP degree, else None (replicate /
+    fall back to sequence sharding)."""
+    axes = dp_axes_for(cfg, mesh) if cfg is not None else dp_axes(mesh)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if not axes:
+        return None
+    if batch % size == 0 and batch >= size:
+        return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """ShapeDtypeStructs for the data batch of a cell."""
+    B, S = shape.global_batch, shape.seq_len
+    f = jax.ShapeDtypeStruct
+    if shape.kind == "decode":
+        return {"tokens": f((B, 1), jnp.int32)}
+    if cfg.input_mode == "embeddings":
+        out = {"frames": f((B, S, cfg.d_model), jnp.float32)}
+        if shape.kind == "train":
+            out["labels"] = f((B, S), jnp.int32)
+        return out
+    if cfg.input_mode == "tokens+patches":
+        Pp = cfg.n_patches
+        out = {"tokens": f((B, S - Pp), jnp.int32),
+               "patches": f((B, Pp, cfg.d_model), jnp.float32)}
+        if shape.kind == "train":
+            out["labels"] = f((B, S - Pp), jnp.int32)
+        return out
+    out = {"tokens": f((B, S), jnp.int32)}
+    if shape.kind == "train":
+        out["labels"] = f((B, S), jnp.int32)
+    return out
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh) -> dict:
+    dp = _dp(mesh, shape.global_batch, cfg)
+    specs = {}
+    for k, v in batch_specs(cfg, shape).items():
+        if dp is None and v.ndim >= 2 and shape.kind != "decode" \
+                and v.shape[1] % dp_size(mesh) == 0:
+            # SP fallback: shard sequence when batch is too small
+            spec = P(None, dp_axes(mesh) if len(dp_axes(mesh)) > 1 else dp_axes(mesh)[0],
+                     *([None] * (v.ndim - 2)))
+        else:
+            spec = P(dp, *([None] * (v.ndim - 1)))
+        specs[k] = NamedSharding(mesh, spec)
+    return specs
+
+
+# ------------------------------------------------------------- decode state
+
+def decode_state_shardings(cfg: ModelConfig, mesh, batch: int) -> Pytree:
+    dp = _dp(mesh, batch, cfg)
+    ns = lambda *parts: NamedSharding(mesh, P(*parts))
+    if cfg.family in ("dense", "moe", "vlm"):
+        # interleaved-MoE caches carry an extra (block, layer-in-block) lead
+        lead = (None, None) if (cfg.family == "moe" and cfg.moe.every > 1)             else (None,)
+        if cfg.attn_kind == "mla":
+            # latent replicated over model (every head shard up-projects it)
+            return {"latent": ns(*lead, dp, None, None),
+                    "k_rope": ns(*lead, dp, None, None),
+                    "index": ns()}
+        from repro.models.layers import eff_heads
+        KV_eff = eff_heads(cfg)[1]
+        tp = mesh.shape.get("model", 1)
+        kv_ax = "model" if (KV_eff % tp == 0 and KV_eff >= tp
+                            and cfg.param_sharding != "replicate") else None
+        return {"k": ns(*lead, dp, None, kv_ax, None),
+                "v": ns(*lead, dp, None, kv_ax, None),
+                "index": ns()}
+    if cfg.family == "ssm":
+        h_ax = None if cfg.param_sharding == "replicate" else "model"
+        return {"tm": {"shift": ns(None, dp, None),
+                       "wkv": ns(None, dp, h_ax, None, None)},
+                "cm_shift": ns(None, dp, None)}
+    if cfg.family == "hybrid":
+        rg = {"h": ns(None, dp, "model"), "conv": ns(None, dp, None, "model")}
+        out = {"blocks": {"l0": rg, "l1": rg,
+                          "l2": {"k": ns(None, dp, None, None, None),
+                                 "v": ns(None, dp, None, None, None),
+                                 "pos": ns(), "index": ns()}}}
+        n_blocks, n_tail = M._hybrid_counts(cfg)
+        if n_tail:
+            out["tail"] = rg
+        return out
+    raise ValueError(cfg.family)
+
+
+def decode_state_shapes(cfg: ModelConfig, batch: int, max_len: int) -> Pytree:
+    return jax.eval_shape(
+        functools.partial(M.init_decode_state, cfg, batch, max_len))
+
+
+def logits_sharding(cfg: ModelConfig, mesh, batch: int):
+    dp = _dp(mesh, batch, cfg)
+    vocab_ax = None if cfg.param_sharding == "replicate" else "model"
+    return NamedSharding(mesh, P(dp, vocab_ax))

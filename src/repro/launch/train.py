@@ -1,0 +1,120 @@
+"""End-to-end training driver with fault tolerance.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
+        --preset smoke --steps 200 --ckpt-dir /tmp/ckpt [--resume] \
+        --ckpt-every 50 [--fail-at 120]
+
+Features exercised here (and in tests/examples):
+  * deterministic restart: checkpoint stores params/opt + pipeline cursor;
+  * async checkpointing (--async-ckpt) overlaps serialization with compute;
+  * failure injection (--fail-at N) kills the process state mid-run and
+    restarts from the latest checkpoint, proving the recovery path;
+  * scales from the CPU smoke preset to the full arch configs (the full
+    configs are exercised via the multi-pod dry-run, not runnable here).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import SHAPES, get_config, get_smoke_config
+from repro.data.pipeline import SyntheticPipeline
+from repro.models import model as M
+from repro.train import checkpoint as CKPT
+from repro.train.optimizer import make_optimizer
+from repro.train.step import make_train_step
+
+
+def build(preset: str, arch: str):
+    if preset == "smoke":
+        return get_smoke_config(arch).with_overrides(param_dtype="float32")
+    if preset == "small":   # ~20M params, minutes on CPU
+        return get_smoke_config(arch).with_overrides(
+            param_dtype="float32", n_layers=4, d_model=256, n_heads=8,
+            n_kv_heads=4, head_dim=32, d_ff=1024, vocab=512)
+    if preset == "full":
+        return get_config(arch)
+    raise ValueError(preset)
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--preset", default="smoke",
+                    choices=["smoke", "small", "full"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--async-ckpt", action="store_true")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--fail-at", type=int, default=0,
+                    help="simulate a crash after N steps, then auto-recover")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = build(args.preset, args.arch)
+    opt = make_optimizer(cfg.optimizer, lr=args.lr)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+    pipe = SyntheticPipeline(cfg, SHAPES["train_4k"], seed=0,
+                             batch_override=args.batch, seq_override=args.seq)
+
+    def fresh():
+        p = M.init_params(cfg, jax.random.key(0))
+        return p, opt.init(p), 0
+
+    def restore():
+        step = CKPT.latest_step(args.ckpt_dir)
+        if step is None:
+            return fresh()
+        p0, o0, _ = fresh()
+        target = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(jnp_shape(x), x.dtype),
+            {"params": p0, "opt": o0})
+        got = CKPT.restore(args.ckpt_dir, step, target)
+        pipe.load_state_dict(CKPT.read_extra(args.ckpt_dir, step))
+        print(f"[recovery] restored step {step} from {args.ckpt_dir}")
+        return got["params"], got["opt"], step
+
+    jnp_shape = lambda x: x.shape
+    params, opt_state, start = restore() if (args.resume and args.ckpt_dir) else fresh()
+
+    losses = []
+    pending = None
+    t0 = time.time()
+    i = start
+    failed = False
+    while i < args.steps:
+        batch = pipe.next()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        i += 1
+        losses.append(float(metrics["loss"]))
+        if i % args.log_every == 0 or i == args.steps:
+            rate = (i - start) / (time.time() - t0 + 1e-9)
+            print(f"step {i:5d} loss {losses[-1]:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({rate:.2f} steps/s)")
+        if args.ckpt_dir and i % args.ckpt_every == 0:
+            if pending is not None:
+                pending.join()
+            pending = CKPT.save(args.ckpt_dir, i,
+                                {"params": params, "opt": opt_state},
+                                extra=pipe.state_dict(),
+                                block=not args.async_ckpt)
+        if args.fail_at and i == args.fail_at and not failed:
+            failed = True
+            print(f"[failure-injection] crash at step {i}; recovering...")
+            params, opt_state, i = restore()
+            t0, start = time.time(), i
+    if pending is not None:
+        pending.join()
+    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
+    return {"final_loss": losses[-1], "first_loss": losses[0], "steps": i}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,426 @@
+"""Shared transformer layers: norms, RoPE, chunked (flash-style) attention,
+GQA / MLA attention blocks, gated MLP.
+
+Attention is q-chunked so the score matrix never materialises at (S, S):
+per-chunk memory is (B, H, chunk, S) — and (B, H, chunk, window+chunk) for
+local attention, which keeps windowed archs sub-quadratic in compute+memory.
+
+GQA sharding strategy (model axis = 16 on the production mesh):
+  * MHA  (kv == heads)   : plain einsum, heads -> model.
+  * MQA  (kv == 1)       : kv replicated + repeated to H at compute time,
+                           heads -> model (cheap: one kv head).
+  * GQA  (1 < kv < heads): *grouped* einsum — q is produced as
+                           (B, S, KV, G, hd) from a (D, KV, G, hd) projection,
+                           kv_heads -> model on BOTH weights and activations,
+                           so no kv repeat and no resharding is ever needed.
+                           (kv=8 on a 16-way axis costs 2x GSPMD padding on
+                           attention einsums; see EXPERIMENTS.md §Perf.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+_NEG = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def gqa_mode(cfg: ModelConfig) -> str:
+    if cfg.attn_layout == "grouped" and cfg.n_kv_heads < cfg.n_heads:
+        return "grouped"
+    return "plain"
+
+
+def eff_heads(cfg: ModelConfig) -> tuple[int, int]:
+    """(H_eff, KV_eff) after TP-alignment padding.  In grouped layout the
+    group ratio G = H/KV is preserved, so H_eff = KV_eff * G."""
+    if gqa_mode(cfg) == "grouped":
+        KV = cfg.pad_kv_to or cfg.n_kv_heads
+        return KV * (cfg.n_heads // cfg.n_kv_heads), KV
+    return (cfg.pad_heads_to or cfg.n_heads), cfg.n_kv_heads
+
+
+def _slot_mask(n_real: int, n_pad: int):
+    return (jnp.arange(n_pad) < n_real)
+
+
+def _wsc(x, cfg: ModelConfig, head_axis: int | None):
+    """Constrain an activation to (batch@dp, ..., heads@tp, ...).  Without
+    this, sequence-parallel residual sharding makes GSPMD head-replicate the
+    attention einsums (observed: per-device scores at full H).  head_axis is
+    the dim to place on the TP axis, or None to replicate all non-batch dims."""
+    if not (cfg.act_dp or cfg.tp_axis):
+        return x
+    from jax.sharding import PartitionSpec as P
+    dp = tuple(cfg.act_dp) if cfg.act_dp else None
+    dp = dp[0] if dp and len(dp) == 1 else dp
+    parts = [dp] + [None] * (x.ndim - 1)
+    if head_axis is not None and cfg.tp_axis:
+        parts[head_axis] = cfg.tp_axis
+    return jax.lax.with_sharding_constraint(x, P(*parts))
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def rope(x, positions, theta: float):
+    """x: (B, S, ..., hd); positions: (S,) or (B, S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs      # (..., S, half)
+    if positions.ndim == 1:
+        ang = ang[None]                                         # (1, S, half)
+    # insert axes for any head dims between S and hd
+    while ang.ndim < x.ndim:
+        ang = ang[:, :, None]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _mask(qpos, kpos, causal, window, kv_len):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), dtype=bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window:
+        m &= kpos[None, :] > qpos[:, None] - window
+    if kv_len is not None:
+        m &= kpos[None, :] < kv_len
+    return m
+
+
+def _attend(q, k, v, qpos, kpos, *, causal, window, kv_len):
+    """Plain heads: q (B,c,H,hd); k,v (B,S,H,hd)."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    s = jnp.where(_mask(qpos, kpos, causal, window, kv_len)[None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def _attend_grouped(q, k, v, qpos, kpos, *, causal, window, kv_len):
+    """Grouped GQA: q (B,c,KV,G,hd); k,v (B,S,KV,hd)."""
+    hd = q.shape[-1]
+    s = jnp.einsum("bqcgd,bscd->bcgqs", q, k,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    m = _mask(qpos, kpos, causal, window, kv_len)
+    s = jnp.where(m[None, None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bcgqs,bscd->bqcgd", p, v)
+
+
+def _chunked(attend, q, qpos, chunk, k, v, kpos, *, causal, window, kv_len):
+    """Map ``attend`` over q chunks; optionally slice k/v to the live window."""
+    B, Sq = q.shape[:2]
+    if not chunk or Sq <= chunk or Sq % chunk:
+        return attend(q, k, v, qpos, kpos, causal=causal, window=window,
+                      kv_len=kv_len)
+    n = Sq // chunk
+    qc = jnp.moveaxis(q.reshape(B, n, chunk, *q.shape[2:]), 1, 0)
+    qposc = qpos.reshape(n, chunk)
+
+    # NOTE: each chunk body is wrapped in jax.checkpoint so the map's backward
+    # recomputes per-chunk probs instead of stashing all chunks' (c, S) score
+    # matrices at once (flash-attention-style recompute; observed 9 GiB/layer
+    # otherwise on the 32k cells).
+    if window and window + chunk < k.shape[1]:
+        # local attention: q-chunk i only sees keys [i*chunk - window, i*chunk + chunk)
+        span = window + chunk
+        kpad = jnp.pad(k, ((0, 0), (window, 0)) + ((0, 0),) * (k.ndim - 2))
+        vpad = jnp.pad(v, ((0, 0), (window, 0)) + ((0, 0),) * (v.ndim - 2))
+        kpospad = jnp.pad(kpos, (window, 0), constant_values=-(2 ** 30))
+
+        @jax.checkpoint
+        def body(args):
+            i, qi, qpi = args
+            start = i * chunk
+            ks = jax.lax.dynamic_slice_in_dim(kpad, start, span, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(vpad, start, span, axis=1)
+            kps = jax.lax.dynamic_slice_in_dim(kpospad, start, span, axis=0)
+            return attend(qi, ks, vs, qpi, kps, causal=causal, window=window,
+                          kv_len=kv_len)
+
+        out = jax.lax.map(body, (jnp.arange(n), qc, qposc))
+    else:
+        @jax.checkpoint
+        def body(args):
+            qi, qpi = args
+            return attend(qi, k, v, qpi, kpos, causal=causal, window=window,
+                          kv_len=kv_len)
+
+        out = jax.lax.map(body, (qc, qposc))
+    out = jnp.moveaxis(out, 0, 1)           # (B, n, chunk, ...heads, hd_v)
+    return out.reshape(B, Sq, *out.shape[3:])
+
+
+def attention(q, k, v, qpos, kpos, *, causal=True, window=0, kv_len=None,
+              chunk=0):
+    """Dispatch on layout: q (B,S,H,hd) plain, or (B,S,KV,G,hd) grouped."""
+    if q.ndim == 5:
+        return _chunked(_attend_grouped, q, qpos, chunk, k, v, kpos,
+                        causal=causal, window=window, kv_len=kv_len)
+    KV, H = k.shape[2], q.shape[2]
+    if KV != H:                      # MQA / small-ratio fallback: repeat kv
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    return _chunked(_attend, q, qpos, chunk, k, v, kpos,
+                    causal=causal, window=window, kv_len=kv_len)
+
+
+def gated_mlp(x, p):
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"])
+    u = jnp.einsum("bsd,df->bsf", x, p["wu"])
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, p["wd"])
+
+
+# ---------------------------------------------------------------- GQA block
+
+def gqa_attention(x, p, cfg: ModelConfig, qpos, kpos, cache=None, *,
+                  window=0):
+    """cache: None or {'k','v': (B,S_max,KV_eff,hd), 'index': scalar}."""
+    B, S, D = x.shape
+    mode = gqa_mode(cfg)
+    H_eff, KV_eff = eff_heads(cfg)
+    if mode == "grouped":
+        q = jnp.einsum("bsd,dcgk->bscgk", x, p["wq"])   # (B,S,KV_eff,G,hd)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dck->bsck", x, p["wk"])
+    v = jnp.einsum("bsd,dck->bsck", x, p["wv"])
+    # pin head-parallel layouts (q heads / grouped kv heads on the TP axis;
+    # replicated small-kv in plain mode)
+    q = _wsc(q, cfg, 2)
+    kv_shard = 2 if (mode == "grouped" or KV_eff == H_eff) else None
+    k = _wsc(k, cfg, kv_shard)
+    v = _wsc(v, cfg, kv_shard)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = rope(q, qpos, cfg.rope_theta)
+    k = rope(k, qpos, cfg.rope_theta)
+
+    new_cache = None
+    kv_len = None
+    if cache is not None:
+        idx = cache["index"]
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+        new_cache = {"k": ck, "v": cv, "index": idx + S}
+        k, v = ck.astype(x.dtype), cv.astype(x.dtype)
+        kv_len = idx + S
+    out = attention(q, k, v, qpos, kpos, causal=cfg.causal, window=window,
+                    kv_len=kv_len, chunk=0 if cache is not None else cfg.attn_chunk)
+    if mode == "grouped":
+        if KV_eff != cfg.n_kv_heads:    # zero padded kv-head groups
+            out = out * _slot_mask(cfg.n_kv_heads, KV_eff).astype(out.dtype)[None, None, :, None, None]
+        out = jnp.einsum("bscgk,cgkd->bsd", out, p["wo"])
+    else:
+        if H_eff != cfg.n_heads:        # zero padded heads
+            out = out * _slot_mask(cfg.n_heads, H_eff).astype(out.dtype)[None, None, :, None]
+        out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, new_cache
+
+
+def init_gqa(key, cfg: ModelConfig, dtype):
+    hd = cfg.resolved_head_dim
+    D, H, KV = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    H_eff, KV_eff = eff_heads(cfg)
+    G = H // KV
+    ks = jax.random.split(key, 4)
+    sc = 0.02
+    oscale = sc / (2 * cfg.n_layers) ** 0.5
+    if gqa_mode(cfg) == "grouped":
+        kvm = _slot_mask(KV, KV_eff)
+        wq = (jax.random.normal(ks[0], (D, KV_eff, G, hd)) * sc
+              * kvm[None, :, None, None]).astype(dtype)
+        wo = (jax.random.normal(ks[3], (KV_eff, G, hd, D)) * oscale
+              * kvm[:, None, None, None]).astype(dtype)
+        kv_mask = kvm
+    else:
+        hm = _slot_mask(H, H_eff)
+        wq = (jax.random.normal(ks[0], (D, H_eff, hd)) * sc
+              * hm[None, :, None]).astype(dtype)
+        wo = (jax.random.normal(ks[3], (H_eff, hd, D)) * oscale
+              * hm[:, None, None]).astype(dtype)
+        kv_mask = None
+    p = {
+        "wq": wq,
+        "wk": (jax.random.normal(ks[1], (D, KV_eff, hd)) * sc
+               * (kv_mask[None, :, None] if kv_mask is not None else 1.0)).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (D, KV_eff, hd)) * sc
+               * (kv_mask[None, :, None] if kv_mask is not None else 1.0)).astype(dtype),
+        "wo": wo,
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def gqa_axes(cfg: ModelConfig):
+    mode = gqa_mode(cfg)
+    H_eff, KV_eff = eff_heads(cfg)
+    if mode == "grouped":
+        p = {"wq": ("embed", "kv_heads", None, None),
+             "wk": ("embed", "kv_heads", None),
+             "wv": ("embed", "kv_heads", None),
+             "wo": ("kv_heads", None, None, "embed")}
+    else:
+        # kv projections: head-sharded when kv == effective heads (MHA);
+        # otherwise row-sharded over the model axis ("kv_in") so their grads
+        # and optimizer state stay sharded (the output AR is tiny: (B,S,KV,hd))
+        if KV_eff == H_eff:
+            kv_spec = ("embed", "heads", None)
+        else:
+            kv_spec = ("kv_in", None, None)
+        p = {"wq": ("embed", "heads", None),
+             "wk": kv_spec,
+             "wv": kv_spec,
+             "wo": ("heads", None, "embed")}
+    if cfg.qk_norm:
+        p["q_norm"] = (None,)
+        p["k_norm"] = (None,)
+    return p
+
+
+# ---------------------------------------------------------------- MLA block
+
+def mla_attention(x, p, cfg: ModelConfig, qpos, kpos, cache=None):
+    """Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2).
+
+    Decode caches only (latent, k_rope): latent is replicated across the
+    model axis (every head shard up-projects the same latent — the standard
+    MLA TP trade-off) and sharded over batch/data.
+    """
+    m = cfg.mla
+    B, S, D = x.shape
+    H = cfg.n_heads
+
+    ql = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_a_norm"])
+    q = _wsc(jnp.einsum("bsr,rhk->bshk", ql, p["wq_b"]), cfg, 2)  # (B,S,H,nope+rope)
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = rope(q_rope, qpos, cfg.rope_theta)
+
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])           # (B,S,lora+rope)
+    latent = rms_norm(kv[..., :m.kv_lora_rank], p["kv_a_norm"])
+    k_rope = rope(kv[..., None, m.kv_lora_rank:], qpos, cfg.rope_theta)
+
+    new_cache = None
+    kv_len = None
+    if cache is not None:
+        idx = cache["index"]
+        cl = jax.lax.dynamic_update_slice_in_dim(
+            cache["latent"], latent.astype(cache["latent"].dtype), idx, axis=1)
+        cr = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope[:, :, 0].astype(cache["k_rope"].dtype), idx, axis=1)
+        new_cache = {"latent": cl, "k_rope": cr, "index": idx + S}
+        latent = cl.astype(x.dtype)
+        k_rope = cr[:, :, None].astype(x.dtype)
+        kv_len = idx + S
+
+    if cache is not None and cfg.mla_absorb:
+        # DeepSeek weight absorption: never up-project the cached latent.
+        #   score_h = (q_nope_h W_k_h^T) . latent + q_rope_h . k_rope
+        #   out_h   = (softmax @ latent) W_v_h
+        # Per-step S-dependent cost drops from O(S*rank*H*(nope+v)) to
+        # O(S*rank*H) x 2 — EXPERIMENTS.md §Perf iteration 4.
+        qk_dim = m.qk_nope_dim + m.qk_rope_dim
+        w_k = p["wkv_b"][..., :m.qk_nope_dim]           # (rank, H, nope)
+        w_v = p["wkv_b"][..., m.qk_nope_dim:]           # (rank, H, v)
+        q_abs = jnp.einsum("bqhn,rhn->bqhr", q_nope, w_k)
+        s = jnp.einsum("bqhr,btr->bhqt", q_abs, latent,
+                       preferred_element_type=jnp.float32)
+        s += jnp.einsum("bqhn,btn->bhqt", q_rope,
+                        new_cache["k_rope"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+        s = s * (qk_dim ** -0.5)
+        T = latent.shape[1]
+        kpos_c = jnp.arange(T, dtype=jnp.int32)
+        s = jnp.where(kpos_c[None, None, None, :] < kv_len, s, _NEG)
+        pa = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        ctx = jnp.einsum("bhqt,btr->bqhr", pa, latent)
+        out = jnp.einsum("bqhr,rhv->bqhv", ctx, w_v)
+        H_eff = cfg.pad_heads_to or H
+        if H_eff != H:
+            out = out * _slot_mask(H, H_eff).astype(out.dtype)[None, None, :, None]
+        out = jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+        return out, new_cache
+
+    kvu = jnp.einsum("bsr,rhk->bshk", latent, p["wkv_b"])
+    k_nope = kvu[..., :m.qk_nope_dim]
+    v = kvu[..., m.qk_nope_dim:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (*k_nope.shape[:3], m.qk_rope_dim))],
+        axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = attention(q_full, k, v, qpos, kpos, causal=cfg.causal,
+                    kv_len=kv_len,
+                    chunk=0 if cache is not None else cfg.attn_chunk)
+    H_eff = cfg.pad_heads_to or H
+    if H_eff != H:                      # zero padded heads
+        out = out * _slot_mask(H, H_eff).astype(out.dtype)[None, None, :, None]
+    out = jnp.einsum("bshv,hvd->bsd", out, p["wo"])
+    return out, new_cache
+
+
+def init_mla(key, cfg: ModelConfig, dtype):
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.n_heads
+    H_eff = cfg.pad_heads_to or H
+    hm = _slot_mask(H, H_eff)
+    qk_dim = m.qk_nope_dim + m.qk_rope_dim
+    ks = jax.random.split(key, 5)
+    sc = 0.02
+    return {
+        "wq_a": (jax.random.normal(ks[0], (D, m.q_lora_rank)) * sc).astype(dtype),
+        "q_a_norm": jnp.zeros((m.q_lora_rank,), dtype),
+        "wq_b": (jax.random.normal(ks[1], (m.q_lora_rank, H_eff, qk_dim)) * sc
+                 * hm[None, :, None]).astype(dtype),
+        "wkv_a": (jax.random.normal(ks[2], (D, m.kv_lora_rank + m.qk_rope_dim)) * sc).astype(dtype),
+        "kv_a_norm": jnp.zeros((m.kv_lora_rank,), dtype),
+        "wkv_b": (jax.random.normal(ks[3], (m.kv_lora_rank, H_eff, m.qk_nope_dim + m.v_head_dim)) * sc
+                  * hm[None, :, None]).astype(dtype),
+        "wo": (jax.random.normal(ks[4], (H_eff, m.v_head_dim, D)) * sc
+               / (2 * cfg.n_layers) ** 0.5 * hm[:, None, None]).astype(dtype),
+    }
+
+
+def mla_axes(cfg: ModelConfig):
+    return {
+        "wq_a": ("embed", None),
+        "q_a_norm": (None,),
+        "wq_b": (None, "heads", None),
+        "wkv_a": ("embed", None),
+        "kv_a_norm": (None,),
+        "wkv_b": (None, "heads", None),
+        "wo": ("heads", None, "embed"),
+    }
+
+
+def init_mlp(key, cfg: ModelConfig, dtype, d_ff=None):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    sc = 0.02
+    return {
+        "wg": (jax.random.normal(ks[0], (D, F)) * sc).astype(dtype),
+        "wu": (jax.random.normal(ks[1], (D, F)) * sc).astype(dtype),
+        "wd": (jax.random.normal(ks[2], (F, D)) * sc
+               / (2 * cfg.n_layers) ** 0.5).astype(dtype),
+    }
+
+
+def mlp_axes():
+    return {"wg": ("embed", "mlp"), "wu": ("embed", "mlp"),
+            "wd": ("mlp", "embed")}

@@ -1,0 +1,572 @@
+"""Model assembly: init / forward / prefill / decode / loss for every family.
+
+Layers are stacked along a leading ``layers`` axis and iterated with
+``jax.lax.scan`` (MaxText-style), which keeps HLO size and compile time flat in
+depth and makes remat policies a one-line wrapper around the scan body.
+
+Families:
+  dense | vlm | audio : [pre-norm GQA/MLA attention] + SwiGLU, scan over L
+  moe                 : attention + grouped top-k MoE (repro.models.moe)
+  ssm                 : RWKV6 layers (repro.models.recurrent)
+  hybrid              : scan over (rglru, rglru, local-attn) super-blocks + tail
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import recurrent as R
+
+Pytree = Any
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def _constrain(x, cfg: ModelConfig):
+    """Residual-stream sharding constraint: batch over act_dp (DP), sequence
+    over act_sp (Megatron-SP, train only).  Required because the vocab-sharded
+    embedding gather otherwise lets GSPMD replicate activations over data."""
+    if cfg.act_dp or cfg.act_sp:
+        from jax.sharding import PartitionSpec as P
+        dp = tuple(cfg.act_dp) if cfg.act_dp else None
+        dp = dp[0] if dp and len(dp) == 1 else dp
+        return jax.lax.with_sharding_constraint(x, P(dp, cfg.act_sp or None, None))
+    return x
+
+
+def _stack_init(key, n, init_one):
+    return jax.vmap(init_one)(jax.random.split(key, n))
+
+
+def _prepend_layers_axis(axes: Pytree) -> Pytree:
+    return jax.tree.map(lambda t: ("layers", *t), axes,
+                        is_leaf=lambda t: isinstance(t, tuple))
+
+
+# ----------------------------------------------------------------- dense/moe
+
+def _init_dense_layer(key, cfg: ModelConfig, dtype, moe_layer=None):
+    ks = jax.random.split(key, 2)
+    if cfg.attn_kind == "mla":
+        attn = L.init_mla(ks[0], cfg, dtype)
+    else:
+        attn = L.init_gqa(ks[0], cfg, dtype)
+    use_moe = moe_layer if moe_layer is not None else (cfg.family == "moe")
+    if use_moe:
+        mlp = MOE.init_moe(ks[1], cfg, dtype)
+    else:
+        mlp = L.init_mlp(ks[1], cfg, dtype)
+    return {"ln1": jnp.zeros((cfg.d_model,), dtype), "attn": attn,
+            "ln2": jnp.zeros((cfg.d_model,), dtype), "mlp": mlp}
+
+
+def _dense_layer_axes(cfg: ModelConfig, moe_layer=None):
+    attn = L.mla_axes(cfg) if cfg.attn_kind == "mla" else L.gqa_axes(cfg)
+    use_moe = moe_layer if moe_layer is not None else (cfg.family == "moe")
+    mlp = MOE.moe_axes(cfg) if use_moe else L.mlp_axes()
+    return {"ln1": (None,), "attn": attn, "ln2": (None,), "mlp": mlp}
+
+
+def _moe_interleaved(cfg: ModelConfig) -> bool:
+    return cfg.family == "moe" and cfg.moe.every > 1
+
+
+def _upcast(p, cfg: ModelConfig):
+    """fp8-serving support: weights stored in param_dtype, upcast per-layer
+    inside the scan body (transient, one layer at a time)."""
+    if not cfg.compute_dtype or cfg.compute_dtype == cfg.param_dtype:
+        return p
+    dt = jnp.dtype(cfg.compute_dtype)
+    return jax.tree.map(lambda t: t.astype(dt) if t.dtype != jnp.int32 else t, p)
+
+
+def _dense_layer_apply(x, p, cfg: ModelConfig, qpos, kpos, cache=None,
+                       window=0, moe_layer=None):
+    p = _upcast(p, cfg)
+    h = L.rms_norm(x, p["ln1"])
+    if cfg.attn_kind == "mla":
+        out, new_cache = L.mla_attention(h, p["attn"], cfg, qpos, kpos, cache)
+    else:
+        out, new_cache = L.gqa_attention(h, p["attn"], cfg, qpos, kpos, cache,
+                                         window=window)
+    x = x + out
+    h = L.rms_norm(x, p["ln2"])
+    use_moe = moe_layer if moe_layer is not None else (cfg.family == "moe")
+    if use_moe:
+        out, aux = MOE.moe_block(h, p["mlp"], cfg)
+    else:
+        out, aux = L.gated_mlp(h, p["mlp"]), jnp.float32(0.0)
+    return x + out, new_cache, aux
+
+
+# ----------------------------------------------------------------- hybrid
+
+def _init_hybrid_temporal(key, cfg, dtype, kind: str):
+    ks = jax.random.split(key, 2)
+    if kind == "rglru":
+        temporal = R.init_rglru_block(ks[0], cfg, dtype)
+    else:
+        temporal = L.init_gqa(ks[0], cfg, dtype)
+    return {"ln1": jnp.zeros((cfg.d_model,), dtype), "temporal": temporal,
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "mlp": L.init_mlp(ks[1], cfg, dtype)}
+
+
+def _hybrid_temporal_axes(cfg, kind: str):
+    t = R.rglru_axes(cfg) if kind == "rglru" else L.gqa_axes(cfg)
+    return {"ln1": (None,), "temporal": t, "ln2": (None,),
+            "mlp": L.mlp_axes()}
+
+
+def _hybrid_layer_apply(x, p, cfg, kind, qpos, kpos, state=None):
+    h = L.rms_norm(x, p["ln1"])
+    if kind == "rglru":
+        out, new_state = R.rglru_block(h, p["temporal"], cfg, state)
+    else:
+        out, new_state = L.gqa_attention(h, p["temporal"], cfg, qpos, kpos,
+                                         cache=None, window=cfg.hybrid.local_window)
+        new_state = state
+    x = x + out
+    x = x + L.gated_mlp(L.rms_norm(x, p["ln2"]), p["mlp"])
+    return x, new_state
+
+
+def _hybrid_counts(cfg: ModelConfig):
+    n_blocks = cfg.n_layers // 3
+    n_tail = cfg.n_layers - 3 * n_blocks
+    return n_blocks, n_tail
+
+
+# ----------------------------------------------------------------- public API
+
+def init_params(cfg: ModelConfig, key) -> Pytree:
+    dtype = jnp.dtype(cfg.param_dtype)
+    V = cfg.vocab_pad_to or cfg.vocab
+    k_embed, k_layers, k_head, k_extra = jax.random.split(key, 4)
+    p: dict = {}
+    if cfg.input_mode != "embeddings":
+        p["embed"] = (jax.random.normal(k_embed, (V, cfg.d_model))
+                      * 0.02).astype(dtype)
+    else:
+        # frame/patch embeddings come from the (stubbed) frontend; keep an
+        # input projection so the backbone still owns a trainable map.
+        p["in_proj"] = (jax.random.normal(k_embed, (cfg.d_model, cfg.d_model))
+                        * 0.02).astype(dtype)
+        p["out_head"] = (jax.random.normal(k_head, (cfg.d_model, V))
+                         * 0.02).astype(dtype)
+    if cfg.input_mode == "tokens+patches":
+        p["patch_proj"] = (jax.random.normal(k_extra, (cfg.d_model, cfg.d_model))
+                           * 0.02).astype(dtype)
+    if cfg.input_mode != "embeddings" and not cfg.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(k_head, (cfg.d_model, V))
+                        * 0.02).astype(dtype)
+    p["final_norm"] = jnp.zeros((cfg.d_model,), dtype)
+
+    if _moe_interleaved(cfg):
+        assert cfg.n_layers % cfg.moe.every == 0
+        nb = cfg.n_layers // cfg.moe.every
+        ka, kb = jax.random.split(k_layers)
+        p["layers"] = {
+            "dense": _stack_init(ka, nb * (cfg.moe.every - 1),
+                                 lambda k: _init_dense_layer(k, cfg, dtype, False)),
+            "moe": _stack_init(kb, nb,
+                               lambda k: _init_dense_layer(k, cfg, dtype, True)),
+        }
+    elif cfg.family in ("dense", "moe", "vlm", "audio"):
+        p["layers"] = _stack_init(k_layers, cfg.n_layers,
+                                  lambda k: _init_dense_layer(k, cfg, dtype))
+    elif cfg.family == "ssm":
+        p["layers"] = _stack_init(k_layers, cfg.n_layers,
+                                  lambda k: R.init_rwkv_layer(k, cfg, dtype))
+    elif cfg.family == "hybrid":
+        n_blocks, n_tail = _hybrid_counts(cfg)
+        kb, kt = jax.random.split(k_layers)
+        kinds = ("rglru", "rglru", "attn")
+        keys3 = jax.random.split(kb, 3)
+        p["blocks"] = {
+            f"l{i}": _stack_init(keys3[i], n_blocks,
+                                 lambda k, kind=kinds[i]: _init_hybrid_temporal(k, cfg, dtype, kind))
+            for i in range(3)
+        }
+        if n_tail:
+            p["tail"] = _stack_init(kt, n_tail,
+                                    lambda k: _init_hybrid_temporal(k, cfg, dtype, "rglru"))
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+def param_axes(cfg: ModelConfig) -> Pytree:
+    """Logical-axis names per parameter, mirroring init_params structure."""
+    p: dict = {}
+    if cfg.input_mode != "embeddings":
+        p["embed"] = ("vocab", "embed")
+    else:
+        p["in_proj"] = ("embed", None)
+        p["out_head"] = ("embed", "vocab")
+    if cfg.input_mode == "tokens+patches":
+        p["patch_proj"] = ("embed", None)
+    if cfg.input_mode != "embeddings" and not cfg.tie_embeddings:
+        p["lm_head"] = ("embed", "vocab")
+    p["final_norm"] = (None,)
+
+    if _moe_interleaved(cfg):
+        p["layers"] = {
+            "dense": _prepend_layers_axis(_dense_layer_axes(cfg, False)),
+            "moe": _prepend_layers_axis(_dense_layer_axes(cfg, True)),
+        }
+    elif cfg.family in ("dense", "moe", "vlm", "audio"):
+        p["layers"] = _prepend_layers_axis(_dense_layer_axes(cfg))
+    elif cfg.family == "ssm":
+        p["layers"] = _prepend_layers_axis(R.rwkv_layer_axes(cfg))
+    elif cfg.family == "hybrid":
+        kinds = ("rglru", "rglru", "attn")
+        p["blocks"] = {f"l{i}": _prepend_layers_axis(_hybrid_temporal_axes(cfg, kinds[i]))
+                       for i in range(3)}
+        n_blocks, n_tail = _hybrid_counts(cfg)
+        if n_tail:
+            p["tail"] = _prepend_layers_axis(_hybrid_temporal_axes(cfg, "rglru"))
+    return p
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch):
+    """batch: {'tokens': (B,S)} | {'frames': (B,S,D)} | + {'patches': (B,P,D)}."""
+    dtype = jnp.dtype(cfg.compute_dtype or cfg.param_dtype)
+    if cfg.input_mode == "embeddings":
+        return jnp.einsum("bsd,de->bse", batch["frames"].astype(dtype),
+                          params["in_proj"].astype(dtype))
+    x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dtype)
+    if cfg.input_mode == "tokens+patches" and "patches" in batch:
+        pe = jnp.einsum("bpd,de->bpe", batch["patches"].astype(dtype),
+                        params["patch_proj"].astype(dtype))
+        x = jnp.concatenate([pe, x], axis=1)
+    return x
+
+
+def _unembed(params, cfg: ModelConfig, x):
+    if cfg.input_mode == "embeddings":
+        logits = jnp.einsum("bsd,dv->bsv", x, params["out_head"].astype(x.dtype))
+    elif cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    # pin vocab-parallel logits: without this GSPMD may keep the sequence
+    # sharding and replicate V, making the lm_head/embed gradient full-size
+    if cfg.tp_axis:
+        from jax.sharding import PartitionSpec as P
+        dp = tuple(cfg.act_dp) if cfg.act_dp else None
+        dp = dp[0] if dp and len(dp) == 1 else dp
+        logits = jax.lax.with_sharding_constraint(logits, P(dp, None, cfg.tp_axis))
+    V = cfg.vocab_pad_to or cfg.vocab
+    if V != cfg.vocab:   # mask padded vocab slots out of softmax/argmax
+        logits = jnp.where(jnp.arange(V) < cfg.vocab, logits,
+                           jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+def forward_hidden(params, batch, cfg: ModelConfig):
+    """Full-sequence forward up to the final norm (pre-unembed).
+    Returns (hidden (B,S,D), aux_loss)."""
+    x = _embed_inputs(params, cfg, batch)
+    B, S, _ = x.shape
+    pos = jnp.arange(S, dtype=jnp.int32)
+
+    x = _constrain(x, cfg)
+    if _moe_interleaved(cfg):
+        ev = cfg.moe.every
+
+        def body(carry, blk):
+            h, aux = carry
+            for j in range(ev - 1):
+                dl = jax.tree.map(lambda t, j=j: t[j], blk["dense"])
+                h, _, a = _dense_layer_apply(h, dl, cfg, pos, pos,
+                                             moe_layer=False)
+                aux = aux + a
+            h, _, a = _dense_layer_apply(h, blk["moe"], cfg, pos, pos,
+                                         moe_layer=True)
+            return (_constrain(h, cfg), aux + a), None
+
+        nb = cfg.n_layers // ev
+        blocks = {
+            "dense": jax.tree.map(
+                lambda t: t.reshape(nb, ev - 1, *t.shape[1:]),
+                params["layers"]["dense"]),
+            "moe": params["layers"]["moe"],
+        }
+        (x, aux), _ = jax.lax.scan(_remat(body, cfg.remat),
+                                   (x, jnp.float32(0.0)), blocks)
+    elif cfg.family in ("dense", "moe", "vlm", "audio"):
+        def body(carry, layer_p):
+            h, aux = carry
+            h, _, a = _dense_layer_apply(h, layer_p, cfg, pos, pos)
+            return (_constrain(h, cfg), aux + a), None
+
+        (x, aux), _ = jax.lax.scan(_remat(body, cfg.remat), (x, jnp.float32(0.0)),
+                                   params["layers"])
+    elif cfg.family == "ssm":
+        def body(h, layer_p):
+            h, _ = R.rwkv_layer(h, layer_p, cfg)
+            return _constrain(h, cfg), None
+
+        x, _ = jax.lax.scan(_remat(body, cfg.remat), x, params["layers"])
+        aux = jnp.float32(0.0)
+    elif cfg.family == "hybrid":
+        kinds = ("rglru", "rglru", "attn")
+
+        def body(h, blk):
+            for i, kind in enumerate(kinds):
+                h, _ = _hybrid_layer_apply(h, blk[f"l{i}"], cfg, kind, pos, pos)
+            return _constrain(h, cfg), None
+
+        x, _ = jax.lax.scan(_remat(body, cfg.remat), x, params["blocks"])
+
+        n_blocks, n_tail = _hybrid_counts(cfg)
+        if n_tail:
+            def tail_body(h, layer_p):
+                h, _ = _hybrid_layer_apply(h, layer_p, cfg, "rglru", pos, pos)
+                return _constrain(h, cfg), None
+
+            x, _ = jax.lax.scan(_remat(tail_body, cfg.remat), x, params["tail"])
+        aux = jnp.float32(0.0)
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rms_norm(x, params["final_norm"].astype(x.dtype))
+    return x, aux
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """Full-sequence forward (train / prefill).  Returns (logits, aux_loss)."""
+    x, aux = forward_hidden(params, batch, cfg)
+    return _unembed(params, cfg, x), aux
+
+
+def _nll(params, cfg: ModelConfig, x, labels):
+    """(sum nll, n_valid) for hidden x (B,c,D) and labels (B,c)."""
+    logits = _unembed(params, cfg, x).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, nll, 0.0)
+    return jnp.sum(nll), jnp.sum(valid)
+
+
+LOSS_CHUNK = 512
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    """Next-token (or frame-target) cross-entropy; labels == -1 are ignored.
+
+    The unembed+softmax is computed in sequence chunks (checkpointed), so the
+    full (B, S, V) f32 logits tensor never materialises — at 128k-200k vocabs
+    that is multiple GiB per device otherwise.
+    """
+    x, aux = forward_hidden(params, batch, cfg)
+    labels = batch["labels"]
+    if x.shape[1] != labels.shape[1]:            # vlm: patches prepended
+        x = x[:, x.shape[1] - labels.shape[1]:]
+    B, S, D = x.shape
+    if S % LOSS_CHUNK == 0 and S > LOSS_CHUNK:
+        n = S // LOSS_CHUNK
+
+        @jax.checkpoint
+        def body(args):
+            xc, lc = args
+            return _nll(params, cfg, xc, lc)
+
+        xc = jnp.moveaxis(x.reshape(B, n, LOSS_CHUNK, D), 1, 0)
+        lc = jnp.moveaxis(labels.reshape(B, n, LOSS_CHUNK), 1, 0)
+        nlls, valids = jax.lax.map(body, (xc, lc))
+        total, denom = jnp.sum(nlls), jnp.sum(valids)
+    else:
+        total, denom = _nll(params, cfg, x, labels)
+    return total / jnp.maximum(denom, 1) + aux
+
+
+# ----------------------------------------------------------------- decode
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int) -> Pytree:
+    dtype = jnp.dtype(cfg.cache_dtype or cfg.param_dtype)
+    hd = cfg.resolved_head_dim
+    KV = L.eff_heads(cfg)[1]
+    Lc = cfg.n_layers
+    if cfg.family in ("dense", "moe", "vlm"):
+        if _moe_interleaved(cfg):
+            ev = cfg.moe.every
+            lead = (Lc // ev, ev)
+        else:
+            lead = (Lc,)
+        if cfg.attn_kind == "mla":
+            m = cfg.mla
+            return {
+                "latent": jnp.zeros((*lead, batch, max_len, m.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((*lead, batch, max_len, m.qk_rope_dim), dtype),
+                "index": jnp.zeros(lead, jnp.int32),
+            }
+        return {
+            "k": jnp.zeros((*lead, batch, max_len, KV, hd), dtype),
+            "v": jnp.zeros((*lead, batch, max_len, KV, hd), dtype),
+            "index": jnp.zeros(lead, jnp.int32),
+        }
+    if cfg.family == "ssm":
+        one = R.init_rwkv_state(cfg, batch, dtype)
+        return jax.tree.map(lambda t: jnp.broadcast_to(t, (Lc, *t.shape)), one)
+    if cfg.family == "hybrid":
+        n_blocks, n_tail = _hybrid_counts(cfg)
+        W = min(cfg.hybrid.local_window, max_len)
+        rg = R.init_rglru_state(cfg, batch, dtype)
+
+        def stack(tree, n):
+            return jax.tree.map(lambda t: jnp.broadcast_to(t, (n, *t.shape)), tree)
+
+        attn_cache = {
+            "k": jnp.zeros((n_blocks, batch, W, KV, hd), dtype),
+            "v": jnp.zeros((n_blocks, batch, W, KV, hd), dtype),
+            "pos": jnp.full((n_blocks, W), -(2 ** 30), jnp.int32),
+            "index": jnp.zeros((n_blocks,), jnp.int32),
+        }
+        state = {"blocks": {"l0": stack(rg, n_blocks), "l1": stack(rg, n_blocks),
+                            "l2": attn_cache}}
+        if n_tail:
+            state["tail"] = stack(rg, n_tail)
+        return state
+    raise ValueError(f"{cfg.family} has no decode state")
+
+
+def decode_step(params, state, tokens, cfg: ModelConfig):
+    """One-token decode.  tokens: (B, 1) int32.  Returns (logits (B,V), state)."""
+    dt = jnp.dtype(cfg.compute_dtype or cfg.param_dtype)
+    x = _constrain(jnp.take(params["embed"], tokens, axis=0).astype(dt), cfg)
+    B = x.shape[0]
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        idx0 = jnp.ravel(state["index"])[0]
+        qpos = idx0[None]
+        if cfg.attn_kind == "mla":
+            max_len = state["latent"].shape[-2]      # (..., B, S, rank)
+        else:
+            max_len = state["k"].shape[-3]           # (..., B, S, KV, hd)
+        kpos = jnp.arange(max_len, dtype=jnp.int32)
+
+        if _moe_interleaved(cfg):
+            ev = cfg.moe.every
+            nb = cfg.n_layers // ev
+            # cache leaves are (nb, ev, B, ...) for interleaved MoE
+            def body(carry, xs):
+                h, aux = carry
+                blk, cache_blk = xs
+                new_cache = jax.tree.map(lambda t: t, cache_blk)
+                caches = []
+                for j in range(ev - 1):
+                    dl = jax.tree.map(lambda t, j=j: t[j], blk["dense"])
+                    cj = jax.tree.map(lambda t, j=j: t[j], cache_blk)
+                    h, cj2, a = _dense_layer_apply(h, dl, cfg, qpos, kpos,
+                                                   cache=cj, moe_layer=False)
+                    aux = aux + a
+                    caches.append(cj2)
+                cj = jax.tree.map(lambda t: t[ev - 1], cache_blk)
+                h, cj2, a = _dense_layer_apply(h, blk["moe"], cfg, qpos, kpos,
+                                               cache=cj, moe_layer=True)
+                caches.append(cj2)
+                new_cache = jax.tree.map(lambda *ts: jnp.stack(ts), *caches)
+                return (h, aux + a), new_cache
+
+            blocks = {
+                "dense": jax.tree.map(
+                    lambda t: t.reshape(nb, ev - 1, *t.shape[1:]),
+                    params["layers"]["dense"]),
+                "moe": params["layers"]["moe"],
+            }
+            (x, _), new_state = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                             (blocks, state))
+        else:
+            def body(carry, xs):
+                h, aux = carry
+                layer_p, layer_cache = xs
+                h, new_cache, a = _dense_layer_apply(h, layer_p, cfg, qpos, kpos,
+                                                     cache=layer_cache)
+                return (h, aux + a), new_cache
+
+            (x, _), new_state = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                             (params["layers"], state))
+    elif cfg.family == "ssm":
+        def body(h, xs):
+            layer_p, layer_state = xs
+            h, new_s = R.rwkv_layer(h, layer_p, cfg, layer_state)
+            return h, new_s
+
+        x, new_state = jax.lax.scan(body, x, (params["layers"], state))
+    elif cfg.family == "hybrid":
+        idx0 = state["blocks"]["l2"]["index"][0]
+        qpos = idx0[None]
+        kinds = ("rglru", "rglru", "attn")
+
+        def hybrid_one(h, p, s, kind):
+            hin = L.rms_norm(h, p["ln1"])
+            if kind == "rglru":
+                out, s = R.rglru_block(hin, p["temporal"], cfg, s)
+            else:
+                ap = p["temporal"]
+                q = jnp.einsum("bsd,dhk->bshk", hin, ap["wq"])
+                k = jnp.einsum("bsd,dhk->bshk", hin, ap["wk"])
+                v = jnp.einsum("bsd,dhk->bshk", hin, ap["wv"])
+                q = L.rope(q, qpos, cfg.rope_theta)
+                k = L.rope(k, qpos, cfg.rope_theta)
+                out, s = R.local_attn_decode(q, k, v, s, cfg.hybrid.local_window)
+                out = jnp.einsum("bshk,hkd->bsd", out, ap["wo"])
+            h = h + out
+            h = h + L.gated_mlp(L.rms_norm(h, p["ln2"]), p["mlp"])
+            return h, s
+
+        def body(h, xs):
+            blk_p, blk_s = xs
+            new_s = {}
+            for i, kind in enumerate(kinds):
+                h, new_s[f"l{i}"] = hybrid_one(h, blk_p[f"l{i}"], blk_s[f"l{i}"], kind)
+            return h, new_s
+
+        x, new_blocks = jax.lax.scan(body, x, (params["blocks"], state["blocks"]))
+        new_state = {"blocks": new_blocks}
+        if "tail" in state:
+            def tail_body(h, xs):
+                layer_p, layer_s = xs
+                h, s = hybrid_one(h, layer_p, layer_s, "rglru")
+                return h, s
+
+            x, new_state["tail"] = jax.lax.scan(tail_body, x,
+                                                (params["tail"], state["tail"]))
+    else:
+        raise ValueError(f"{cfg.family} has no decode step")
+
+    x = L.rms_norm(x, params["final_norm"].astype(x.dtype))
+    logits = _unembed(params, cfg, x)
+    return logits[:, 0], new_state
+
+
+def prefill(params, batch, cfg: ModelConfig):
+    """Prefill forward: logits for the last position (cache writing elided —
+    the dry-run prefill cell measures the forward cost; serving uses
+    decode_step on a state produced by ``prefill_with_cache``)."""
+    logits, _ = forward(params, batch, cfg)
+    return logits[:, -1]
+
+
+def count_params(cfg: ModelConfig) -> int:
+    import math
+    shapes = jax.eval_shape(functools.partial(init_params, cfg),
+                            jax.random.key(0))
+    return sum(math.prod(x.shape) if x.shape else 1
+               for x in jax.tree.leaves(shapes))

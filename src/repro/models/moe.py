@@ -1,0 +1,102 @@
+"""Grouped top-k MoE (Switch/T5X-style dispatch), expert-parallel friendly.
+
+Tokens are split into groups (``moe.group_size`` tokens each); dispatch and
+combine tensors are built per group so their footprint is
+O(G * gs * k * E * C / E) = O(tokens * k * capacity) instead of O(tokens^2).
+Groups shard over the data axes, experts over the model axis (EP).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import init_mlp
+
+
+def _capacity(gs: int, top_k: int, n_experts: int, factor: float) -> int:
+    c = int(gs * top_k / n_experts * factor)
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4
+
+
+def moe_block(x, p, cfg: ModelConfig):
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    E, K = m.n_experts, m.top_k
+    N = B * S
+    gs = min(m.group_size, N)
+    assert N % gs == 0, f"tokens {N} not divisible by moe group size {gs}"
+    G = N // gs
+    C = _capacity(gs, K, E, m.capacity_factor)
+
+    xg = x.reshape(G, gs, D)
+    logits = jnp.einsum("gnd,de->gne", xg, p["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (G,gs,E) f32
+
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)            # (G,gs,K)
+    mask = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)    # (G,gs,K,E)
+
+    # Load-balancing aux loss (Switch): E * mean(frac_tokens * mean_prob).
+    frac = jnp.mean(mask[:, :, 0, :], axis=1)                  # first choice
+    mean_prob = jnp.mean(probs, axis=1)
+    aux = jnp.mean(jnp.sum(frac * mean_prob, axis=-1)) * E * m.router_aux_weight
+
+    # Position of each (token, choice) in its expert's buffer; token-major so
+    # earlier tokens win capacity, choices of one token ordered by rank.
+    flat = mask.reshape(G, gs * K, E)
+    pos = jnp.cumsum(flat, axis=1) * flat                      # 1-based
+    keep = (pos > 0) & (pos <= C)
+    slot = jnp.where(keep, pos - 1, 0).astype(jnp.int32)
+    disp = jax.nn.one_hot(slot, C, dtype=x.dtype) * keep[..., None].astype(x.dtype)
+    disp = disp.reshape(G, gs, K, E, C)
+
+    gate_vals = (gate_vals / (jnp.sum(gate_vals, axis=-1, keepdims=True) + 1e-9))
+    comb = disp * gate_vals[..., None, None].astype(x.dtype)   # (G,gs,K,E,C)
+    disp = jnp.sum(disp, axis=2)                               # (G,gs,E,C)
+    comb = jnp.sum(comb, axis=2)
+
+    xin = jnp.einsum("gnec,gnd->gecd", disp, xg)               # (G,E,C,D)
+    g = jnp.einsum("gecd,edf->gecf", xin, p["wg"])
+    u = jnp.einsum("gecd,edf->gecf", xin, p["wu"])
+    h = jax.nn.silu(g) * u
+    eout = jnp.einsum("gecf,efd->gecd", h, p["wd"])            # (G,E,C,D)
+    out = jnp.einsum("gnec,gecd->gnd", comb, eout)
+
+    if m.n_shared_experts:
+        sg = jnp.einsum("gnd,df->gnf", xg, p["shared"]["wg"])
+        su = jnp.einsum("gnd,df->gnf", xg, p["shared"]["wu"])
+        out = out + jnp.einsum("gnf,fd->gnd", jax.nn.silu(sg) * su,
+                               p["shared"]["wd"])
+    return out.reshape(B, S, D), aux
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    m = cfg.moe
+    D, E, F = cfg.d_model, m.n_experts, m.d_ff_expert
+    ks = jax.random.split(key, 5)
+    sc = 0.02
+    p = {
+        "router": (jax.random.normal(ks[0], (D, E)) * sc).astype(jnp.float32),
+        "wg": (jax.random.normal(ks[1], (E, D, F)) * sc).astype(dtype),
+        "wu": (jax.random.normal(ks[2], (E, D, F)) * sc).astype(dtype),
+        "wd": (jax.random.normal(ks[3], (E, F, D)) * sc
+               / (2 * cfg.n_layers) ** 0.5).astype(dtype),
+    }
+    if m.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg, dtype, d_ff=cfg.d_ff * m.n_shared_experts)
+    return p
+
+
+def moe_axes(cfg: ModelConfig):
+    p = {
+        "router": ("embed", None),
+        "wg": ("experts", "embed", None),
+        "wu": ("experts", "embed", None),
+        "wd": ("experts", None, "embed"),
+    }
+    if cfg.moe.n_shared_experts:
+        p["shared"] = {"wg": ("embed", "mlp"), "wu": ("embed", "mlp"),
+                       "wd": ("mlp", "embed")}
+    return p

@@ -1,0 +1,300 @@
+"""Recurrent families: RWKV6 (Finch) time/channel mix and RG-LRU (Griffin /
+RecurrentGemma) blocks, as pure-jnp lax.scan recurrences.
+
+These are the reference semantics; ``repro.kernels.{rwkv6_scan,rglru_scan}``
+provide the TPU Pallas implementations validated against these functions.
+Decode carries O(1)-in-context state: RWKV6 keeps a (hd x hd) matrix per head
+plus token-shift vectors; RG-LRU keeps the hidden vector plus a conv tail; the
+hybrid's local attention keeps a ring buffer of ``window`` positions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import rms_norm, rope, attention
+
+TM_LORA = 32   # ddlerp lora rank
+W_LORA = 64    # decay lora rank
+
+
+# ------------------------------------------------------------------ RWKV6
+
+def _token_shift(x, prev):
+    """xx_t = x_{t-1} - x_t with x_{-1} = prev (B, D)."""
+    shifted = jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+    return shifted - x
+
+
+WKV_CHUNK = 128   # checkpoint boundary: backward stores state every chunk
+
+
+def wkv6(r, k, v, w, u, state):
+    """WKV6 recurrence.  r,k,v,w: (B,S,H,hd); u: (H,hd); state: (B,H,hd,hd)
+    [key-dim x value-dim, float32].  Returns (y (B,S,H,hd), new state).
+
+    Time is scanned in checkpointed chunks of WKV_CHUNK steps so the backward
+    stores only chunk-boundary states (the per-step (hd x hd) outer products
+    are recomputed inside each chunk).
+    """
+    dtype = r.dtype
+    B, S, H, hd = r.shape
+    r, k, v, w = (t.astype(jnp.float32) for t in (r, k, v, w))
+    u = u.astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                                # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]            # (B,H,hd,hd)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, u[None, :, :, None] * kv + s)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    def run(s, xs):
+        return jax.lax.scan(step, s, xs)
+
+    if S % WKV_CHUNK == 0 and S > WKV_CHUNK:
+        n = S // WKV_CHUNK
+
+        @jax.checkpoint
+        def chunk_body(s, xs):
+            return run(s, xs)
+
+        xs = tuple(jnp.moveaxis(t, 1, 0).reshape(n, WKV_CHUNK, B, H, hd)
+                   for t in (r, k, v, w))
+        state, ys = jax.lax.scan(chunk_body, state, xs)
+        ys = ys.reshape(S, B, H, hd)
+    else:
+        xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+        state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(dtype), state
+
+
+def rwkv_time_mix(x, p, cfg: ModelConfig, state=None):
+    """state: {'shift': (B,D), 'wkv': (B,H,hd,hd) f32} or None (zeros)."""
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.resolved_head_dim
+    if state is None:
+        state = {"shift": jnp.zeros((B, D), x.dtype),
+                 "wkv": jnp.zeros((B, H, hd, hd), jnp.float32)}
+
+    xx = _token_shift(x, state["shift"])
+    xxx = x + xx * p["mu_x"]
+    lo = jnp.tanh(jnp.einsum("bsd,dr->bsr", xxx, p["tm_w1"]))
+    lo = lo.reshape(B, S, 5, TM_LORA)
+    deltas = jnp.einsum("bsfr,frd->bsfd", lo, p["tm_w2"])   # (B,S,5,D)
+    m = p["mu"][None, None] + deltas                        # order: w,k,v,r,g
+    xw, xk, xv, xr, xg = (x + xx * m[:, :, i] for i in range(5))
+
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"]).reshape(B, S, H, hd)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"]))
+    wlo = jnp.einsum("bsr,rd->bsd", jnp.tanh(
+        jnp.einsum("bsd,dr->bsr", xw, p["w_w1"])), p["w_w2"])
+    w = jnp.exp(-jnp.exp((p["w0"] + wlo).astype(jnp.float32)))
+    w = w.reshape(B, S, H, hd)
+
+    y, wkv_state = wkv6(r, k, v, w, p["u"], state["wkv"])
+    y = y.reshape(B, S, D)
+    # per-head group norm (ln_x)
+    yh = y.reshape(B, S, H, hd).astype(jnp.float32)
+    mean = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mean) * jax.lax.rsqrt(var + 64e-5)
+    y = (yh.reshape(B, S, D) * p["lnx_s"] + p["lnx_b"]).astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", y * g, p["wo"])
+    new_state = {"shift": x[:, -1, :], "wkv": wkv_state}
+    return out, new_state
+
+
+def rwkv_channel_mix(x, p, cfg: ModelConfig, state=None):
+    B, S, D = x.shape
+    if state is None:
+        state = jnp.zeros((B, D), x.dtype)
+    xx = _token_shift(x, state)
+    xk = x + xx * p["mu_ck"]
+    xr = x + xx * p["mu_cr"]
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["wk_c"])))
+    out = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr_c"])) * \
+        jnp.einsum("bsf,fd->bsd", kk, p["wv_c"])
+    return out, x[:, -1, :]
+
+
+def rwkv_layer(x, p, cfg: ModelConfig, state=None):
+    """Full RWKV6 layer.  state: {'tm': {...}, 'cm_shift': (B,D)} or None."""
+    tm_state = state["tm"] if state is not None else None
+    cm_state = state["cm_shift"] if state is not None else None
+    h, tm_state = rwkv_time_mix(rms_norm(x, p["ln1"]), p["tm"], cfg, tm_state)
+    x = x + h
+    h, cm_state = rwkv_channel_mix(rms_norm(x, p["ln2"]), p["cm"], cfg, cm_state)
+    x = x + h
+    return x, {"tm": tm_state, "cm_shift": cm_state}
+
+
+def init_rwkv_layer(key, cfg: ModelConfig, dtype):
+    D, F = cfg.d_model, cfg.d_ff
+    H, hd = cfg.n_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 16)
+    sc = 0.02
+    n = lambda i, shape, s=sc: (jax.random.normal(ks[i], shape) * s).astype(dtype)
+    tm = {
+        "mu_x": jnp.zeros((D,), dtype),
+        "mu": (jax.random.uniform(ks[0], (5, D)) * 0.5).astype(dtype),
+        "tm_w1": n(1, (D, 5 * TM_LORA)),
+        "tm_w2": n(2, (5, TM_LORA, D)),
+        "wr": n(3, (D, D)),
+        "wk": n(4, (D, D)),
+        "wv": n(5, (D, D)),
+        "wg": n(6, (D, D)),
+        "wo": n(7, (D, D), sc / (2 * cfg.n_layers) ** 0.5),
+        "w0": (jax.random.normal(ks[8], (D,)) * 0.3 - 0.6).astype(dtype),
+        "w_w1": n(9, (D, W_LORA)),
+        "w_w2": n(10, (W_LORA, D)),
+        "u": n(11, (H, hd), 0.3),
+        "lnx_s": jnp.ones((D,), jnp.float32),
+        "lnx_b": jnp.zeros((D,), jnp.float32),
+    }
+    cm = {
+        "mu_ck": jnp.zeros((D,), dtype),
+        "mu_cr": jnp.zeros((D,), dtype),
+        "wk_c": n(12, (D, F)),
+        "wv_c": n(13, (F, D), sc / (2 * cfg.n_layers) ** 0.5),
+        "wr_c": n(14, (D, D)),
+    }
+    return {"ln1": jnp.zeros((D,), dtype), "ln2": jnp.zeros((D,), dtype),
+            "tm": tm, "cm": cm}
+
+
+def rwkv_layer_axes(cfg: ModelConfig):
+    tm = {
+        "mu_x": (None,), "mu": (None, None),
+        "tm_w1": ("embed", None), "tm_w2": (None, None, "embed"),
+        "wr": ("embed", "heads_flat"), "wk": ("embed", "heads_flat"),
+        "wv": ("embed", "heads_flat"), "wg": ("embed", "heads_flat"),
+        "wo": ("heads_flat", "embed"),
+        "w0": ("heads_flat",), "w_w1": ("embed", None), "w_w2": (None, "heads_flat"),
+        "u": ("heads", None), "lnx_s": (None,), "lnx_b": (None,),
+    }
+    cm = {"mu_ck": (None,), "mu_cr": (None,),
+          "wk_c": ("embed", "mlp"), "wv_c": ("mlp", "embed"),
+          "wr_c": ("embed", "heads_flat")}
+    return {"ln1": (None,), "ln2": (None,), "tm": tm, "cm": cm}
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype):
+    D, H, hd = cfg.d_model, cfg.n_heads, cfg.resolved_head_dim
+    return {
+        "tm": {"shift": jnp.zeros((batch, D), dtype),
+               "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32)},
+        "cm_shift": jnp.zeros((batch, D), dtype),
+    }
+
+
+# ------------------------------------------------------------------ RG-LRU
+
+def causal_conv1d(u, w, b, conv_state=None):
+    """Depthwise causal conv.  u: (B,S,R); w: (cw,R); b: (R,).
+    conv_state: (B, cw-1, R) tail of previous tokens, or None (zeros)."""
+    B, S, R = u.shape
+    cw = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((B, cw - 1, R), u.dtype)
+    up = jnp.concatenate([conv_state, u], axis=1)            # (B, S+cw-1, R)
+    out = sum(up[:, j:j + S, :] * w[cw - 1 - j] for j in range(cw))
+    new_state = up[:, -(cw - 1):, :] if cw > 1 else conv_state
+    return out + b, new_state
+
+
+def rg_lru(u, p, h0):
+    """RG-LRU: h_t = a_t * h_{t-1} + sqrt(1-a_t^2) * (i_t * u_t).
+    u: (B,S,R); h0: (B,R) f32.  Returns (h_seq (B,S,R), h_last)."""
+    dtype = u.dtype
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", uf, p["w_rg"].astype(jnp.float32)) + p["b_rg"])
+    i = jax.nn.sigmoid(jnp.einsum("bsr,rq->bsq", uf, p["w_ig"].astype(jnp.float32)) + p["b_ig"])
+    log_a = -8.0 * r * jax.nn.softplus(p["a_param"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+
+    def step(h, inp):
+        at, gt = inp
+        h = at * h + gt
+        return h, h
+
+    xs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(gated, 1, 0))
+    h_last, hs = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(hs, 0, 1).astype(dtype), h_last
+
+
+def rglru_block(x, p, cfg: ModelConfig, state=None):
+    """Griffin recurrent block.  state: {'h': (B,R) f32, 'conv': (B,cw-1,R)}."""
+    hb = cfg.hybrid
+    B, S, D = x.shape
+    if state is None:
+        state = {"h": jnp.zeros((B, hb.rnn_width), jnp.float32),
+                 "conv": jnp.zeros((B, hb.conv_width - 1, hb.rnn_width), x.dtype)}
+    gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["w_gate"]))
+    u = jnp.einsum("bsd,dr->bsr", x, p["w_in"])
+    u, conv_state = causal_conv1d(u, p["conv_w"], p["conv_b"], state["conv"])
+    h, h_last = rg_lru(u, p, state["h"])
+    out = jnp.einsum("bsr,rd->bsd", h * gate, p["w_out"])
+    return out, {"h": h_last, "conv": conv_state}
+
+
+def init_rglru_block(key, cfg: ModelConfig, dtype):
+    hb = cfg.hybrid
+    D, R = cfg.d_model, hb.rnn_width
+    ks = jax.random.split(key, 6)
+    sc = 0.02
+    return {
+        "w_gate": (jax.random.normal(ks[0], (D, R)) * sc).astype(dtype),
+        "w_in": (jax.random.normal(ks[1], (D, R)) * sc).astype(dtype),
+        "conv_w": (jax.random.normal(ks[2], (hb.conv_width, R)) * sc).astype(dtype),
+        "conv_b": jnp.zeros((R,), dtype),
+        "w_rg": (jax.random.normal(ks[3], (R, R)) * sc).astype(dtype),
+        "b_rg": jnp.zeros((R,), jnp.float32),
+        "w_ig": (jax.random.normal(ks[4], (R, R)) * sc).astype(dtype),
+        "b_ig": jnp.zeros((R,), jnp.float32),
+        # init so that a ~ 0.9..0.999 as in Griffin
+        "a_param": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, R)) / 8.0)).astype(jnp.float32),
+        "w_out": (jax.random.normal(ks[5], (R, D)) * sc
+                  / (2 * cfg.n_layers) ** 0.5).astype(dtype),
+    }
+
+
+def rglru_axes(cfg: ModelConfig):
+    return {
+        "w_gate": ("embed", "rnn"), "w_in": ("embed", "rnn"),
+        "conv_w": (None, "rnn"), "conv_b": ("rnn",),
+        "w_rg": ("rnn_in", "rnn"), "b_rg": ("rnn",),
+        "w_ig": ("rnn_in", "rnn"), "b_ig": ("rnn",),
+        "a_param": ("rnn",), "w_out": ("rnn", "embed"),
+    }
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype):
+    hb = cfg.hybrid
+    return {"h": jnp.zeros((batch, hb.rnn_width), jnp.float32),
+            "conv": jnp.zeros((batch, hb.conv_width - 1, hb.rnn_width), dtype)}
+
+
+# --------------------------------------------- local-attention ring buffer
+
+def local_attn_decode(q, k_new, v_new, cache, window: int):
+    """One-token decode against a ring buffer of the last ``window`` keys.
+
+    q, k_new, v_new: (B, 1, H|KV, hd) already rope'd at absolute positions.
+    cache: {'k','v': (B,W,KV,hd), 'pos': (W,), 'index': scalar abs position}.
+    """
+    idx = cache["index"]
+    W = cache["k"].shape[1]
+    slot = jnp.mod(idx, W)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    cpos = jax.lax.dynamic_update_slice_in_dim(cache["pos"], idx[None], slot, axis=0)
+    qpos = idx[None]
+    out = attention(q, ck.astype(q.dtype), cv.astype(q.dtype), qpos, cpos,
+                    causal=True, window=window, chunk=0)
+    return out, {"k": ck, "v": cv, "pos": cpos, "index": idx + 1}

@@ -1,0 +1,137 @@
+"""Optimizers: AdamW (fp32 moments) and Adafactor (factored second moment,
+beta1=0) — the latter keeps optimizer state ~O(sqrt(params)) so the 123B/400B
+train cells fit v5e HBM (see EXPERIMENTS.md §Dry-run).
+
+Functional API:
+    opt = make_optimizer(cfg.optimizer, lr=...)
+    state = opt.init(params)
+    params, state = opt.update(grads, state, params)
+
+State sharding: AdamW moments reuse the parameter shardings (helper
+``opt_state_axes``); Adafactor's factored stats are small enough to replicate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """update(grads, state, params, scale=1.0): ``scale`` is folded into each
+    per-leaf (fused) update, so gradient clipping never materialises an extra
+    full-tree f32 copy."""
+    name: str
+    init: Callable[[Pytree], Pytree]
+    update: Callable[..., tuple[Pytree, Pytree]]
+
+
+def _adamw(lr, b1, b2, eps, weight_decay):
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, scale=1.0):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m / (1 - b1 ** c)
+            vhat = v / (1 - b2 ** c)
+            step = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"m": new_m, "v": new_v, "count": count}
+
+    return init, update
+
+
+def _adafactor(lr, eps, decay_rate, weight_decay, clip_threshold=1.0):
+    def factored(shape) -> bool:
+        return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+    def init_leaf(p):
+        if factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    def init(params):
+        return {"stats": jax.tree.map(init_leaf, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, scale=1.0):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        beta2 = 1.0 - c ** (-decay_rate)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32) * scale
+            g2 = jnp.square(g) + eps
+            if factored(g.shape):
+                vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                pre = (vr[..., None] / denom[..., None]) * vc[..., None, :]
+                u = g * jax.lax.rsqrt(pre + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            # update clipping (RMS(u) <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            pf = p.astype(jnp.float32)
+            new_p = (pf - lr * u - lr * weight_decay * pf).astype(p.dtype)
+            return new_p, new_s
+
+        out = jax.tree.map(upd, grads, state["stats"], params,
+                           is_leaf=lambda t: isinstance(t, dict) and ("vr" in t or "v" in t))
+        is_pair = lambda t: isinstance(t, tuple)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is_pair)
+        new_stats = jax.tree.map(lambda t: t[1], out, is_leaf=is_pair)
+        return new_params, {"stats": new_stats, "count": count}
+
+    return init, update
+
+
+def make_optimizer(name: str, lr: float = 1e-3, weight_decay: float = 0.0) -> Optimizer:
+    if name == "adamw":
+        init, update = _adamw(lr, 0.9, 0.95, 1e-8, weight_decay)
+    elif name == "adafactor":
+        init, update = _adafactor(lr, 1e-30, 0.8, weight_decay)
+    else:
+        raise ValueError(name)
+    return Optimizer(name, init, update)
+
+
+def opt_state_axes(name: str, axes: Pytree) -> Pytree:
+    """Logical axes for optimizer state given parameter logical axes."""
+    is_ax = lambda t: isinstance(t, tuple)
+    if name == "adamw":
+        return {"m": axes, "v": axes, "count": ()}
+    if name == "adafactor":
+        # factored stats are tiny -> replicate (None axes); non-factored reuse.
+        def leaf(ax):
+            return {"vr": tuple([None] * max(len(ax) - 1, 0)),
+                    "vc": tuple([None] * max(len(ax) - 1, 0)),
+                    "v": ax}
+        # We cannot know factored-ness from axes alone; resolved later against
+        # the real state tree by matching dict keys (see launch/sharding.py).
+        return {"stats": jax.tree.map(leaf, axes, is_leaf=is_ax), "count": ()}
+    raise ValueError(name)

@@ -1,0 +1,83 @@
+"""Train / serve step builders.
+
+``make_train_step`` returns a pure function (params, opt_state, batch) ->
+(params, opt_state, metrics) with optional microbatched gradient accumulation
+(a memory/throughput lever used by the perf pass).  ``make_serve_step`` is the
+one-token decode step operated by the serving path and the decode dry-run
+cells.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.train.optimizer import Optimizer
+
+Pytree = Any
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def make_train_step(cfg: ModelConfig, opt: Optimizer, *,
+                    num_microbatches: int = 1, clip_norm: float = 1.0):
+    loss_fn = functools.partial(M.loss_fn, cfg=cfg)
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, batch))(params)
+        else:
+            nm = num_microbatches
+            mb = jax.tree.map(
+                lambda x: x.reshape(nm, x.shape[0] // nm, *x.shape[1:]), batch)
+            acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, mbatch):
+                lsum, gacc = carry
+                l, g = jax.value_and_grad(lambda p: loss_fn(p, mbatch))(params)
+                gacc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                return (lsum + l, gacc), None
+
+            (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0.0), acc0), mb)
+            loss = loss / nm
+
+        # grads hold the SUM over microbatches; fold 1/nm into the fused
+        # per-leaf scale instead of materialising a divided copy
+        nm = num_microbatches
+        gnorm = global_norm(grads) / nm
+        scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-9)) / nm
+        new_params, new_opt_state = opt.update(grads, opt_state, params,
+                                               scale=scale)
+        metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gnorm}
+        return new_params, new_opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        return M.loss_fn(params, batch, cfg)
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return M.prefill(params, batch, cfg)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, sample: str = "greedy"):
+    def serve_step(params, state, tokens):
+        logits, new_state = M.decode_step(params, state, tokens, cfg)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tokens, new_state
+
+    return serve_step

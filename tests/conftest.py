@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests must see the real 1-device CPU platform (the dry-run sets its own
+# XLA_FLAGS in-process; never here)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

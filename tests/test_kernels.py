@@ -1,0 +1,92 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp oracles,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+def _arr(*s, dtype=jnp.float32):
+    return jnp.asarray(RNG.standard_normal(s), dtype=dtype)
+
+
+@pytest.mark.parametrize("S,hd,H,KV,causal,dtype", [
+    (128, 64, 2, 2, True, jnp.float32),
+    (256, 64, 4, 2, True, jnp.float32),
+    (256, 128, 2, 1, True, jnp.bfloat16),
+    (128, 64, 2, 2, False, jnp.float32),
+    (512, 64, 2, 2, True, jnp.float32),
+])
+def test_flash_attention(S, hd, H, KV, causal, dtype):
+    B = 2
+    q, k, v = _arr(B, S, H, hd, dtype=dtype), _arr(B, S, KV, hd, dtype=dtype), \
+        _arr(B, S, KV, hd, dtype=dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    kk = jnp.repeat(k, H // KV, axis=2)
+    vv = jnp.repeat(v, H // KV, axis=2)
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    want = ref.flash_attention(fold(q), fold(kk), fold(vv), causal=causal)
+    want = want.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("S,hd,chunk,dtype", [
+    (64, 16, 16, jnp.float32),
+    (128, 32, 64, jnp.float32),
+    (128, 16, 32, jnp.bfloat16),
+])
+def test_wkv6(S, hd, chunk, dtype):
+    B, H = 2, 3
+    r, k, v = _arr(B, S, H, hd, dtype=dtype), _arr(B, S, H, hd, dtype=dtype), \
+        _arr(B, S, H, hd, dtype=dtype)
+    w = jnp.asarray(RNG.uniform(0.8, 0.99, (B, S, H, hd)), dtype)
+    u = _arr(H, hd, dtype=dtype)
+    out = ops.wkv6(r, k, v, w, u, chunk=chunk)
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    ub = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, hd)
+    want = ref.wkv6(fold(r), fold(k), fold(v), fold(w), ub)
+    want = want.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_wkv6_matches_model_semantics():
+    """Kernel == the model's recurrence (repro.models.recurrent.wkv6)."""
+    from repro.models.recurrent import wkv6 as model_wkv6
+    B, S, H, hd = 2, 64, 4, 16
+    r, k, v = _arr(B, S, H, hd), _arr(B, S, H, hd), _arr(B, S, H, hd)
+    w = jnp.asarray(RNG.uniform(0.8, 0.99, (B, S, H, hd)), jnp.float32)
+    u = _arr(H, hd)
+    out = ops.wkv6(r, k, v, w, u, chunk=16)
+    want, _ = model_wkv6(r, k, v, w, u, jnp.zeros((B, H, hd, hd), jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-4)
+
+
+@pytest.mark.parametrize("S,R,dtype", [
+    (64, 64, jnp.float32), (256, 512, jnp.float32), (128, 128, jnp.bfloat16),
+])
+def test_rglru(S, R, dtype):
+    B = 2
+    a = jnp.asarray(RNG.uniform(0.7, 0.999, (B, S, R)), dtype)
+    g = _arr(B, S, R, dtype=dtype)
+    out = ops.rglru(a, g)
+    want = ref.rglru_scan(a, g)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("N,f,k", [(1024, 8, 4), (2048, 16, 8), (512, 6, 3)])
+def test_kmeans_assign(N, f, k):
+    x, c = _arr(N, f), _arr(k, f)
+    lab, dist = ops.kmeans_assign(x, c)
+    wl, wd = ref.kmeans_assign(x, c)
+    assert int(jnp.sum(lab != wl)) == 0
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(wd), atol=1e-3)
