@@ -23,9 +23,10 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (fig3_workflow_profiles, fig45_runtimes,
-                            fig67_usage, fig8_multiworkflow, kernel_bench,
-                            perf_variants, roofline, table4_profiling)
+    from benchmarks import (engine_bench, fig3_workflow_profiles,
+                            fig45_runtimes, fig67_usage, fig8_multiworkflow,
+                            kernel_bench, perf_variants, roofline,
+                            table4_profiling)
     suites = {
         "table4": table4_profiling.main,
         "fig3": fig3_workflow_profiles.main,
@@ -35,6 +36,7 @@ def main() -> None:
         "roofline": roofline.main,
         "perf": perf_variants.main,
         "kernels": kernel_bench.main,
+        "engine": engine_bench.main,
     }
     os.makedirs(RESULTS, exist_ok=True)
     all_out = {}

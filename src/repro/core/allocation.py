@@ -34,15 +34,19 @@ def priority_groups(info: GroupInfo, task_labels: dict) -> list[int]:
 
 
 def pick_node(info: GroupInfo, task_labels, node_load, feasible,
-              rng=None) -> str | None:
+              rng=None, priority=None) -> str | None:
     """node_load: node -> load metric (lower = freer); feasible: node -> bool.
     Returns the chosen node name or None if nothing is feasible.  Load ties
-    break randomly (rng) so list order never leaks into placement."""
+    break randomly (rng) so list order never leaks into placement.
+    ``priority`` optionally supplies a precomputed `priority_groups` result
+    (the scheduler memoizes it per label vector — the jnp score matrix is
+    dispatch-bound at one call per placement)."""
     tie = (lambda: rng.random()) if rng is not None else (lambda: 0.0)
     if task_labels is None:         # unknown task -> fair: least-loaded overall
         cands = [n for n, ok in feasible.items() if ok]
         return min(cands, key=lambda n: (node_load[n], tie())) if cands else None
-    for g in priority_groups(info, task_labels):
+    for g in (priority if priority is not None
+              else priority_groups(info, task_labels)):
         cands = [n for n in info.group_nodes[g] if feasible.get(n)]
         if cands:
             return min(cands, key=lambda n: (node_load[n], tie()))

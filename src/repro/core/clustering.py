@@ -1,10 +1,20 @@
 """k-means++ clustering with silhouette-based model selection (paper §IV-B).
 
 Pure JAX, jit-able, deterministic in the PRNG key.  This is the fleet-scale
-path: on 15-node clusters it is instant, but the same code (backed by the
-``repro.kernels.kmeans`` Pallas kernel for the assignment step) groups 10^5
-nodes.  ``choose_k`` sweeps k and picks the silhouette maximiser, exactly the
-paper's control-function formulation.
+path: on 15-node clusters it is instant, and the same code groups 10^5
+profiles:
+
+  * the Lloyd update uses a segment-sum (or, on TPU, the fused
+    ``repro.kernels.kmeans.kmeans_lloyd_step`` Pallas kernel that emits
+    labels and per-cluster sums/counts in one pass) instead of the seed's
+    (n, k) one-hot matmul;
+  * ``silhouette_blocked`` streams row blocks so the dense (n, n) distance
+    matrix never exists; ``choose_k`` scores large inputs on a
+    deterministic subsample through that blocked path.
+
+``choose_k`` sweeps k and picks the silhouette maximiser, exactly the
+paper's control-function formulation; results on paper-sized inputs are
+unchanged from the seed.
 """
 from __future__ import annotations
 
@@ -38,9 +48,22 @@ def _pairwise_sq(X, C):
     return jnp.maximum(x2 + c2 - 2.0 * X @ C.T, 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "iters"))
-def kmeans_pp(X, k: int, key, iters: int = 32):
-    """Returns (labels (n,), centers (k,f), inertia scalar)."""
+def kmeans_pp(X, k: int, key, iters: int = 32, use_kernel: bool | None = None):
+    """Returns (labels (n,), centers (k,f), inertia scalar).
+
+    ``use_kernel=None`` auto-selects the fused Pallas Lloyd step on TPU
+    (when the point count tiles evenly); the portable path computes the
+    update with segment-sums, so neither path materializes the (n, k)
+    one-hot matmul of the seed implementation.
+    """
+    if use_kernel is None:
+        use_kernel = (jax.default_backend() == "tpu"
+                      and X.shape[0] % 1024 == 0)
+    return _kmeans_pp(X, k, key, iters, bool(use_kernel))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "use_kernel"))
+def _kmeans_pp(X, k: int, key, iters: int, use_kernel: bool):
     n, f = X.shape
 
     def init_step(carry, _):
@@ -62,13 +85,20 @@ def kmeans_pp(X, k: int, key, iters: int = 32):
 
     def lloyd(carry, _):
         C, _ = carry
-        d2 = _pairwise_sq(X, C)
-        lab = jnp.argmin(d2, axis=1)
-        onehot = jax.nn.one_hot(lab, k, dtype=X.dtype)      # (n,k)
-        counts = jnp.sum(onehot, axis=0)                    # (k,)
-        sums = onehot.T @ X                                 # (k,f)
+        if use_kernel:
+            from repro.kernels.kmeans import kmeans_lloyd_step
+            lab, _d, sums, counts = kmeans_lloyd_step(
+                X, C, block_n=min(1024, n))
+            sums = sums.astype(X.dtype)
+            counts = counts.astype(X.dtype)
+        else:
+            d2 = _pairwise_sq(X, C)
+            lab = jnp.argmin(d2, axis=1)
+            counts = jax.ops.segment_sum(jnp.ones((n,), X.dtype), lab,
+                                         num_segments=k)     # (k,)
+            sums = jax.ops.segment_sum(X, lab, num_segments=k)  # (k,f)
         newC = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1)[:, None], C)
-        return (newC, lab), None
+        return (newC, lab.astype(jnp.int32)), None
 
     (C, labels), _ = jax.lax.scan(lloyd, (C, jnp.zeros((n,), jnp.int32)), None,
                                   length=iters)
@@ -95,12 +125,63 @@ def silhouette(X, labels, k: int):
     return jnp.mean(s)
 
 
-def choose_k(X, k_max: int = 6, key=None, restarts: int = 4):
+@functools.partial(jax.jit, static_argnames=("k", "block"))
+def silhouette_blocked(X, labels, k: int, block: int = 1024):
+    """Mean silhouette without ever forming the (n, n) distance matrix.
+
+    Streams row blocks: peak memory is (block, n) per step.  Same formula
+    as ``silhouette`` (singletons get s=0), so results agree to float
+    tolerance; use this above a few thousand points.
+    """
+    n, f = X.shape
+    nb = -(-n // block)
+    pad = nb * block - n
+    Xp = jnp.pad(X, ((0, pad), (0, 0)))
+    labp = jnp.pad(labels, (0, pad), constant_values=-1)
+    onehot = jax.nn.one_hot(labels, k, dtype=X.dtype)       # (n,k) — k is tiny
+    counts = jnp.sum(onehot, axis=0)                        # (k,)
+
+    def body(acc, inp):
+        xb, lb = inp                                        # (block,f), (block,)
+        d = jnp.sqrt(_pairwise_sq(xb, X))                   # (block, n)
+        sums = d @ onehot                                   # (block, k)
+        valid = lb >= 0
+        lbc = jnp.maximum(lb, 0)
+        own = counts[lbc]
+        a = jnp.where(own > 1,
+                      sums[jnp.arange(xb.shape[0]), lbc] / jnp.maximum(own - 1, 1),
+                      0.0)
+        other = sums / jnp.maximum(counts[None, :], 1)
+        other = jnp.where((jnp.arange(k)[None, :] == lbc[:, None]) |
+                          (counts[None, :] == 0), jnp.inf, other)
+        b = jnp.min(other, axis=1)
+        s = jnp.where(own > 1, (b - a) / jnp.maximum(jnp.maximum(a, b), 1e-30), 0.0)
+        return acc + jnp.sum(jnp.where(valid, s, 0.0)), None
+
+    total, _ = jax.lax.scan(
+        body, jnp.float32(0.0),
+        (Xp.reshape(nb, block, f), labp.reshape(nb, block)))
+    return total / n
+
+
+def choose_k(X, k_max: int = 6, key=None, restarts: int = 4,
+             silhouette_sample: int = 4096, silhouette_block: int = 1024):
     """Sweep k in [2, k_max], pick max silhouette (paper's control function).
-    Returns dict(k, labels (np), centers, silhouette, per_k scores)."""
+    Returns dict(k, labels (np), centers, silhouette, per_k scores).
+
+    Paper-sized inputs (n <= silhouette_sample) keep the seed's dense
+    scoring path bit-for-bit.  Above that, scores come from a
+    deterministic subsample evaluated through ``silhouette_blocked``, so a
+    10^5-profile sweep completes without an (n, n) — or even
+    (sample, sample) — distance matrix.
+    """
     X = standardize(X)
     n = X.shape[0]
     key = key if key is not None else jax.random.key(0)
+    sample_idx = None
+    if n > silhouette_sample:
+        perm = jax.random.permutation(jax.random.fold_in(key, 0x5117), n)
+        sample_idx = perm[:silhouette_sample]
     best = None
     per_k = {}
     for k in range(2, min(k_max, n - 1) + 1):
@@ -111,7 +192,11 @@ def choose_k(X, k_max: int = 6, key=None, restarts: int = 4):
             if best_k is None or float(inertia) < best_k[2]:
                 best_k = (labels, C, float(inertia))
         labels, C, _ = best_k
-        score = float(silhouette(X, labels, k))
+        if sample_idx is None:
+            score = float(silhouette(X, labels, k))
+        else:
+            score = float(silhouette_blocked(
+                X[sample_idx], labels[sample_idx], k, block=silhouette_block))
         per_k[k] = score
         if best is None or score > best["silhouette"]:
             best = {"k": k, "labels": np.asarray(labels), "centers": np.asarray(C),

@@ -13,6 +13,7 @@ values of the workflow's tasks into n intervals; a task's label is the
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 
 import numpy as np
@@ -100,11 +101,9 @@ def usage_intervals(info: GroupInfo, feature: str, usages: list[float]) -> list[
 
 
 def label_from_bounds(value: float, bounds: list[float]) -> int:
-    lab = 1
-    for b in bounds:
-        if value >= b:
-            lab += 1
-    return lab
+    # bounds are non-decreasing (cut points of a sorted distribution), so the
+    # 1-based interval index is a bisect: 1 + |{b : b <= value}|
+    return 1 + bisect.bisect_right(bounds, value)
 
 
 def label_task(db: TraceDB, info: GroupInfo, workflow: str, task_name: str):

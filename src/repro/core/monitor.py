@@ -8,10 +8,14 @@ share history (paper A3: workflows are executed repeatedly).
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import itertools
 import json
 from collections import defaultdict
 from typing import Optional
+
+_DB_UIDS = itertools.count()     # distinguishes store generations (see uid)
 
 TASK_FEATURES = ("cpu", "mem", "io")     # %cores*100, GB resident, MB moved
 
@@ -28,16 +32,36 @@ class TaskTrace:
 
 
 class TraceDB:
+    """In-process trace store with incrementally maintained views.
+
+    Fleet-scale notes: runtimes are kept sorted via ``bisect.insort`` so
+    ``runtime_quantile`` is an O(1) index instead of an O(n log n) re-sort
+    per speculation check; per-workflow task-name sets are cached so
+    ``all_usages`` is O(task names) instead of an O(records) rescan; and
+    ``version`` is a monotonically increasing history epoch that lets
+    schedulers memoize anything derived from the store (labels, usage
+    intervals) until the next write.
+    """
+
     def __init__(self):
         self.records: list[TaskTrace] = []
+        self.version = 0                  # history epoch, bumped on every add
+        # unique per store *generation*: clear() re-runs __init__ and resets
+        # version, so external caches must key on (uid, version) — uid alone
+        # distinguishes both different TraceDB objects and pre/post-clear
+        # states of the same object
+        self.uid = next(_DB_UIDS)
         # materialized aggregates: (wf, task, feature) -> [count, total]
         self._agg = defaultdict(lambda: [0, 0.0])
         self._runtime_agg = defaultdict(lambda: [0, 0.0])
-        self._runtimes = defaultdict(list)
+        self._runtimes = defaultdict(list)          # kept sorted (insort)
+        self._wf_tasks = defaultdict(set)           # workflow -> task names
+        self._usage_cache: dict = {}                # (wf, feature) -> (version, list)
 
     # -- writes ---------------------------------------------------------
     def add(self, trace: TaskTrace) -> None:
         self.records.append(trace)
+        self.version += 1
         for f in TASK_FEATURES:
             if f in trace.usage:
                 a = self._agg[(trace.workflow, trace.task_name, f)]
@@ -46,7 +70,9 @@ class TraceDB:
         r = self._runtime_agg[(trace.workflow, trace.task_name)]
         r[0] += 1
         r[1] += trace.runtime_s
-        self._runtimes[(trace.workflow, trace.task_name)].append(trace.runtime_s)
+        bisect.insort(self._runtimes[(trace.workflow, trace.task_name)],
+                      trace.runtime_s)
+        self._wf_tasks[trace.workflow].add(trace.task_name)
 
     def clear(self) -> None:
         self.__init__()
@@ -64,7 +90,7 @@ class TraceDB:
         return (s / c) if c else None
 
     def runtime_quantile(self, workflow: str, task_name: str, q: float) -> Optional[float]:
-        xs = sorted(self._runtimes[(workflow, task_name)])
+        xs = self._runtimes[(workflow, task_name)]   # maintained sorted
         if not xs:
             return None
         i = min(int(q * len(xs)), len(xs) - 1)
@@ -72,13 +98,19 @@ class TraceDB:
 
     def all_usages(self, workflow: str, feature: str) -> list[float]:
         """Per-task mean usage over this workflow's historic+active tasks,
-        the distribution the percentile intervals are applied to (§IV-C)."""
-        names = {r.task_name for r in self.records if r.workflow == workflow}
+        the distribution the percentile intervals are applied to (§IV-C).
+        Cached per history epoch — labeling hits this once per feature per
+        placement decision."""
+        key = (workflow, feature)
+        hit = self._usage_cache.get(key)
+        if hit is not None and hit[0] == self.version:
+            return hit[1]
         out = []
-        for t in sorted(names):
+        for t in sorted(self._wf_tasks[workflow]):
             u = self.mean_usage(workflow, t, feature)
             if u is not None:
                 out.append(u)
+        self._usage_cache[key] = (self.version, out)
         return out
 
     # -- persistence ------------------------------------------------------

@@ -71,12 +71,15 @@ class FillNodesScheduler(Scheduler):
     def __init__(self, node_names, seed: int = 0):
         self.nodes = list(node_names)
         np.random.default_rng(seed).shuffle(self.nodes)
+        # name -> shuffled-list rank; the seed did `self.nodes.index(n)`
+        # inside the sort key, an O(n^2) comparator at fleet scale
+        self._rank = {n: i for i, n in enumerate(self.nodes)}
 
     def select_node(self, task, nodes, feasible, db):
         # prefer partially-filled feasible nodes, then list order
         for cand in sorted(self.nodes,
                            key=lambda n: (nodes[n].free_cores == nodes[n].spec.cores,
-                                          self.nodes.index(n))):
+                                          self._rank[n])):
             if feasible.get(cand):
                 return cand
         return None
@@ -93,6 +96,24 @@ class _ProfiledScheduler(Scheduler):
         # fastest-first node order by measured cpu speed (for SJFN)
         self.by_speed = [p.node for p in
                          sorted(self.profiles, key=lambda p: -p.features["cpu"])]
+        self._label_cache: dict = {}     # (wf, task, db.version) -> labels
+
+    def task_labels(self, db, workflow: str, task_name: str):
+        """`labeling.label_task` memoized per history epoch.
+
+        Labels only change when the monitor ingests a new trace, so keying
+        the memo on the store generation + ``db.version`` keeps results
+        identical to recomputing while turning the per-placement cost into
+        a dict hit (``db.uid`` guards against version collisions across
+        ``clear()`` or a scheduler reused with a different TraceDB).
+        """
+        key = (workflow, task_name, db.uid, db.version)
+        if key not in self._label_cache:
+            if len(self._label_cache) > 65536:     # epoch churn backstop
+                self._label_cache.clear()
+            self._label_cache[key] = labeling.label_task(
+                db, self.info, workflow, task_name)
+        return self._label_cache[key]
 
 
 class SJFNScheduler(_ProfiledScheduler):
@@ -130,11 +151,20 @@ class TaremaScheduler(_ProfiledScheduler):
     def __init__(self, specs, seed: int = 0):
         super().__init__(specs, seed)
         self.rng = np.random.default_rng(seed + 1)
+        self._priority_cache: dict = {}  # label vector -> group priority list
 
     def select_node(self, task, nodes, feasible, db):
-        labels = labeling.label_task(db, self.info, task.workflow, task.name)
+        labels = self.task_labels(db, task.workflow, task.name)
+        priority = None
+        if labels is not None:
+            key = tuple(sorted(labels.items()))
+            priority = self._priority_cache.get(key)
+            if priority is None:
+                priority = allocation.priority_groups(self.info, labels)
+                self._priority_cache[key] = priority
         load = {n: nodes[n].load() for n in nodes}
-        return allocation.pick_node(self.info, labels, load, feasible, self.rng)
+        return allocation.pick_node(self.info, labels, load, feasible, self.rng,
+                                    priority=priority)
 
 
 def make_scheduler(name: str, specs, seed: int = 0) -> Scheduler:

@@ -1,11 +1,22 @@
-"""k-means assignment Pallas TPU kernel (the paper-core compute at fleet
-scale: grouping 10^5+ node profiles, repro.core.clustering).
+"""k-means Pallas TPU kernels (the paper-core compute at fleet scale:
+grouping 10^5+ node profiles, repro.core.clustering).
 
-Grid over point blocks; the full centroid matrix (k <= 64, f <= 128) lives in
-VMEM; distances via one MXU matmul per block (||x-c||^2 = ||x||^2 - 2 x.c +
-||c||^2) and an argmin over lanes.
+Two entry points:
 
-TARGET: TPU.  Validated via interpret=True vs ref.kmeans_assign in tests.
+* ``kmeans_assign`` — assignment only: grid over point blocks; the full
+  centroid matrix (k <= 64, f <= 128) lives in VMEM; distances via one MXU
+  matmul per block (||x-c||^2 = ||x||^2 - 2 x.c + ||c||^2) and an argmin
+  over lanes.
+* ``kmeans_lloyd_step`` — one *fused* Lloyd iteration: the same distance
+  block additionally feeds an in-kernel accumulation of per-cluster sums
+  and counts (block-local one-hot contraction on the MXU, accumulated
+  across the sequential TPU grid into revisited output blocks).  The caller
+  gets labels, sums, counts and min-distances from a single pass over the
+  points, so the (n, k) one-hot never exists in HBM and the update step
+  needs no second matmul over the full point set.
+
+TARGET: TPU.  Validated via interpret=True vs ref.kmeans_assign /
+ref.kmeans_lloyd_step in tests.
 """
 from __future__ import annotations
 
@@ -43,5 +54,67 @@ def kmeans_assign(x, c, *, block_n: int = 1024, interpret: bool = False):
                    pl.BlockSpec((block_n,), lambda i: (i,))],
         out_shape=[jax.ShapeDtypeStruct((N,), jnp.int32),
                    jax.ShapeDtypeStruct((N,), jnp.float32)],
+        interpret=interpret,
+    )(x, c)
+
+
+def _lloyd_kernel(x_ref, c_ref, lab_ref, dist_ref, sums_ref, cnt_ref):
+    i = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)               # (block_n, f)
+    c = c_ref[...].astype(jnp.float32)               # (k, f)
+    k = c.shape[0]
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=1)[None, :]
+    d = x2 + c2 - 2.0 * jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    lab = jnp.argmin(d, axis=1).astype(jnp.int32)
+    lab_ref[...] = lab
+    dist_ref[...] = jnp.min(d, axis=1)
+    # block-local one-hot lives only in VMEM; contraction over the block
+    # dimension yields this block's per-cluster sums/counts on the MXU
+    onehot = (lab[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
+              ).astype(jnp.float32)                  # (block_n, k)
+    block_sums = jax.lax.dot_general(
+        onehot, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (k, f)
+    block_cnt = jnp.sum(onehot, axis=0)              # (k,)
+
+    # sequential-grid accumulation into the revisited (k, f)/(k,) outputs
+    @pl.when(i == 0)
+    def _init():
+        sums_ref[...] = block_sums
+        cnt_ref[...] = block_cnt
+
+    @pl.when(i > 0)
+    def _accum():
+        sums_ref[...] += block_sums
+        cnt_ref[...] += block_cnt
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def kmeans_lloyd_step(x, c, *, block_n: int = 1024, interpret: bool = False):
+    """One fused Lloyd step.  x: (N, f); c: (k, f).
+
+    Returns (labels (N,) int32, sq-dists (N,) f32, sums (k, f) f32,
+    counts (k,) f32) — everything the update `c' = sums / counts` and the
+    inertia `sum(sq-dists)` need, from a single pass over the points.
+    """
+    N, f = x.shape
+    k = c.shape[0]
+    block_n = min(block_n, N)
+    assert N % block_n == 0
+    return pl.pallas_call(
+        _lloyd_kernel,
+        grid=(N // block_n,),
+        in_specs=[pl.BlockSpec((block_n, f), lambda i: (i, 0)),
+                  pl.BlockSpec((k, f), lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec((block_n,), lambda i: (i,)),
+                   pl.BlockSpec((block_n,), lambda i: (i,)),
+                   pl.BlockSpec((k, f), lambda i: (0, 0)),
+                   pl.BlockSpec((k,), lambda i: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((N,), jnp.int32),
+                   jax.ShapeDtypeStruct((N,), jnp.float32),
+                   jax.ShapeDtypeStruct((k, f), jnp.float32),
+                   jax.ShapeDtypeStruct((k,), jnp.float32)],
         interpret=interpret,
     )(x, c)

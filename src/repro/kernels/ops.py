@@ -57,3 +57,10 @@ def kmeans_assign(x, c, *, interpret: bool | None = None):
     return _km.kmeans_assign(
         x, c, block_n=min(1024, x.shape[0]),
         interpret=_default_interpret() if interpret is None else interpret)
+
+
+def kmeans_lloyd_step(x, c, *, interpret: bool | None = None):
+    """Fused Lloyd iteration: (labels, sq-dists, cluster sums, counts)."""
+    return _km.kmeans_lloyd_step(
+        x, c, block_n=min(1024, x.shape[0]),
+        interpret=_default_interpret() if interpret is None else interpret)

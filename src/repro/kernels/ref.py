@@ -56,3 +56,14 @@ def kmeans_assign(x, c):
     d = (jnp.sum(xf * xf, axis=1)[:, None] + jnp.sum(cf * cf, axis=1)[None, :]
          - 2.0 * xf @ cf.T)
     return jnp.argmin(d, axis=1).astype(jnp.int32), jnp.min(d, axis=1)
+
+
+def kmeans_lloyd_step(x, c):
+    """Oracle for the fused Lloyd step: labels, sq-dists, per-cluster sums
+    and counts.  The reference may materialize the (n, k) one-hot — that is
+    exactly what the fused kernel avoids."""
+    labels, dists = kmeans_assign(x, c)
+    onehot = jax.nn.one_hot(labels, c.shape[0], dtype=jnp.float32)   # (n, k)
+    sums = onehot.T @ x.astype(jnp.float32)                          # (k, f)
+    counts = jnp.sum(onehot, axis=0)                                 # (k,)
+    return labels, dists, sums, counts

@@ -1,27 +1,50 @@
 """Discrete-event heterogeneous-cluster engine (the Kubernetes/Nextflow
-stand-in the paper's evaluation runs on).
+stand-in the paper's evaluation runs on), vectorized for fleet scale.
 
-Execution model: a running task owns its reserved cores outright (the
-resource manager reserves them), progresses through blended cpu/mem/io work
-at node-dependent rates, and *shares* memory bandwidth with co-resident tasks
-and volume I/O bandwidth cluster-wide (the paper uses one persistent volume).
-This contention is exactly the mechanism §V-E-b cites for Tarema beating
-SJFN: packing the fastest nodes inflates co-residency.
+Execution model (unchanged from the seed engine, see ``engine_ref.py``): a
+running task owns its reserved cores outright, progresses through blended
+cpu/mem/io work at node-dependent rates, and *shares* memory bandwidth with
+co-resident tasks and volume I/O bandwidth cluster-wide.  This contention is
+exactly the mechanism §V-E-b cites for Tarema beating SJFN.
 
-Rates are recomputed at every event; remaining work advances proportionally
-(processor-sharing fluid model).
+What changed for 10^3-node / 10^5-instance fleets (the seed implementation
+is preserved verbatim in ``engine_ref.py`` and the equivalence tests assert
+bit-for-bit identical makespans and assignment traces):
+
+  * ready promotion is dependency-counter based: a ``deps_left`` map is
+    decremented as predecessors finish — O(total edges) per run instead of
+    an O(all tasks) rescan per event;
+  * rate / time-left / advance math runs over structure-of-arrays state:
+    per-node contention inputs (free cores, co-resident count, straggler
+    factor) and per-running-task remaining work live in numpy arrays that
+    are maintained incrementally on start/finish/kill, so each event costs
+    a handful of vectorized ops instead of a Python loop re-deriving every
+    rate twice;
+  * the next-finish search is a masked argmin over append-only task slots;
+    slot order equals ``running``-dict insertion order, so tie-breaking is
+    identical to the seed's ``min`` over dict items.
+
+Floating-point evaluation order inside the rate formulas is kept exactly as
+in the seed so results match bit-for-bit, not just statistically.
 
 Fault-tolerance features (beyond-paper, used by the FT tests/examples):
   * node failure injection — running tasks are re-queued, node leaves;
   * straggler injection + speculative re-execution (first copy to finish
     wins), gated on the monitor's historic p95.
+
+Known-broken seed paths fixed here (unreachable by the equivalence suite):
+the idle-with-pending-failure branch indexed the failure *node* instead of
+its time (a guaranteed TypeError) and then looped without disabling the
+node; this engine jumps to the next exogenous event (failure or delayed
+submission) and processes it.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
 import itertools
-from typing import Callable, Optional
+from collections import defaultdict
+from typing import Optional
 
 import numpy as np
 
@@ -38,19 +61,86 @@ SMT_PENALTY = 0.15           # CPU slowdown at full occupancy (vCPUs are SMT
                              # threads; single-threaded benchmarks miss this)
 BW_EXP = 0.30                 # node bandwidth ~ (cores/8)**BW_EXP
 
+_REM_FEATURES = ("cpu", "mem", "io")   # column order of the remaining-work SoA
 
-@dataclasses.dataclass
+
+class _NodeArrays:
+    """Structure-of-arrays over the cluster's nodes.
+
+    Static columns are derived from the specs once (preserving the seed's
+    exact multiplication order, e.g. ``mem_static = mem_bw * 0.02``);
+    dynamic columns (free cores/mem, co-resident count, straggler factor,
+    disabled flag) are the single source of truth and are exposed through
+    ``SimNode`` properties for scheduler/test compatibility.
+    """
+
+    __slots__ = ("names", "index", "cores", "mem_gb", "cpu_speed",
+                 "app_factor", "io_seq", "mem_static", "bw_scale",
+                 "free_cores", "free_mem", "n_running", "slow", "disabled")
+
+    def __init__(self, specs: list[NodeSpec], bw_exp: float):
+        self.names = [s.name for s in specs]
+        self.index = {n: i for i, n in enumerate(self.names)}
+        self.cores = np.array([s.cores for s in specs], np.int64)
+        self.mem_gb = np.array([s.mem_gb for s in specs], np.float64)
+        self.cpu_speed = np.array([s.cpu_speed for s in specs], np.float64)
+        self.app_factor = np.array([s.app_factor for s in specs], np.float64)
+        self.io_seq = np.array([s.io_seq for s in specs], np.float64)
+        # total memory bandwidth scales sublinearly with the VM's core count
+        # (bigger GCP shapes span more memory channels); benchmarks are
+        # single-threaded so Table IV numbers are unaffected
+        self.mem_static = np.array([s.mem_bw for s in specs], np.float64) * 0.02
+        self.bw_scale = (self.cores / 8.0) ** bw_exp
+        self.free_cores = self.cores.copy()
+        self.free_mem = self.mem_gb.copy()
+        self.n_running = np.zeros(len(specs), np.int64)
+        self.slow = np.ones(len(specs), np.float64)
+        self.disabled = np.zeros(len(specs), bool)
+
+
 class SimNode:
-    spec: NodeSpec
-    free_cores: int
-    free_mem: float
-    running: set = dataclasses.field(default_factory=set)
-    disabled: bool = False
-    slow_factor: float = 1.0   # straggler injection
+    """Per-node view consumed by schedulers and tests.
+
+    Dynamic fields are array-backed properties so external writes (e.g. the
+    straggler tests setting ``slow_factor``) are visible to the vectorized
+    rate computation without any per-event refresh.
+    """
+
+    __slots__ = ("spec", "running", "_na", "_i")
+
+    def __init__(self, spec: NodeSpec, na: _NodeArrays, i: int):
+        self.spec = spec
+        self.running: set = set()
+        self._na = na
+        self._i = i
 
     @property
     def name(self):
         return self.spec.name
+
+    @property
+    def free_cores(self) -> int:
+        return int(self._na.free_cores[self._i])
+
+    @property
+    def free_mem(self) -> float:
+        return float(self._na.free_mem[self._i])
+
+    @property
+    def slow_factor(self) -> float:
+        return float(self._na.slow[self._i])
+
+    @slow_factor.setter
+    def slow_factor(self, v: float):
+        self._na.slow[self._i] = v
+
+    @property
+    def disabled(self) -> bool:
+        return bool(self._na.disabled[self._i])
+
+    @disabled.setter
+    def disabled(self, v: bool):
+        self._na.disabled[self._i] = v
 
     def load(self) -> float:
         cores = 1.0 - self.free_cores / self.spec.cores
@@ -73,15 +163,19 @@ class EngineConfig:
 
 class Engine:
     def __init__(self, specs: list[NodeSpec], scheduler, db: TraceDB,
-                 config: EngineConfig = EngineConfig(),
+                 config: Optional[EngineConfig] = None,
                  disabled_nodes: Optional[set] = None):
-        self.nodes = {s.name: SimNode(s, s.cores, s.mem_gb) for s in specs}
+        # one config per engine: the seed's `config=EngineConfig()` default
+        # was a shared mutable instance across every default-configured run
+        self.cfg = EngineConfig() if config is None else config
+        self._na = _NodeArrays(specs, self.cfg.bw_exp)
+        self.nodes = {s.name: SimNode(s, self._na, i)
+                      for i, s in enumerate(specs)}
         for n in disabled_nodes or ():
             self.nodes[n].disabled = True
         self.scheduler = scheduler
         self.db = db
-        self.cfg = config
-        self.rng = np.random.default_rng(config.seed)
+        self.rng = np.random.default_rng(self.cfg.seed)
         self.t = 0.0
         self.queue: list[TaskInstance] = []
         self.running: dict[str, TaskInstance] = {}
@@ -91,47 +185,78 @@ class Engine:
         self._failures: list[tuple] = []         # (time, node)
         self._spec_copies: dict[str, str] = {}   # primary id -> copy id
         self._uid = itertools.count()
+        # append-only running-task slots (SoA); slot order == start order ==
+        # `running`-dict insertion order, which the argmin tie-break relies on
+        self._slot_cap = 256
+        self._rem = np.zeros((self._slot_cap, 3), np.float64)
+        self._slot_node = np.zeros(self._slot_cap, np.int64)
+        self._slot_active = np.zeros(self._slot_cap, bool)
+        self._slot_tasks: list[Optional[TaskInstance]] = [None] * self._slot_cap
+        self._n_slots = 0
+        self._n_active = 0
+        self._task_slot: dict[str, int] = {}
+        # dependency-counter scheduling state (built in _prepare at run())
+        self._seq: dict[str, int] = {}           # instance -> submission order
+        self._seq_counter = itertools.count()
+        self._deps_left: dict[str, int] = {}
+        self._dependents: dict[str, list] = {}
+        self._ready_batch: list[str] = []        # deps satisfied, not promoted
+        self._arrivals: list[tuple] = []         # (submit_t, seq, instance)
+        self._unfinished = 0
+        self._max_end = 0.0
 
     # ------------------------------------------------------------ submission
     def submit(self, spec: WorkflowSpec, run_id: int, seed: int = 0,
                at: float = 0.0, input_scale: float = 1.0):
         for inst in instantiate(spec, run_id, seed, input_scale):
             inst.submit_t = at
+            if inst.instance not in self._seq:
+                self._seq[inst.instance] = next(self._seq_counter)
             self.all_tasks[inst.instance] = inst
 
     def fail_node_at(self, t: float, node: str):
         self._failures.append((t, node))
 
-    # ------------------------------------------------------------- mechanics
-    def _rates(self, task: TaskInstance) -> dict:
-        node = self.nodes[task.node]
-        mem_sharers = len(node.running)
-        io_active = len(self.running)
-        slow = node.slow_factor * node.spec.app_factor
-        # total memory bandwidth scales sublinearly with the VM's core count
-        # (bigger GCP shapes span more memory channels); benchmarks are
-        # single-threaded so Table IV numbers are unaffected
-        bw_scale = (node.spec.cores / 8.0) ** self.cfg.bw_exp
+    # ----------------------------------------------------- vectorized rates
+    def _node_rates(self):
+        """Per-node (cpu, mem, io) service rates, one vectorized pass.
+
+        Expression structure mirrors the seed's `_rates` exactly (same
+        operand order) so gathered per-task rates are bit-identical.
+        """
+        na, cfg = self._na, self.cfg
         # SMT/LLC contention: past 50% vCPU occupancy, co-runners share
         # physical cores and last-level cache
-        occ = 1.0 - node.free_cores / node.spec.cores
-        smt = 1.0 - self.cfg.smt_penalty * max(0.0, occ - 0.5) / 0.5
-        return {
-            "cpu": node.spec.cpu_speed * slow * smt,
-            "mem": node.spec.mem_bw * 0.02 * slow * bw_scale
-                   / min(1.0 + self.cfg.mem_beta * max(0, mem_sharers - 1),
-                         self.cfg.mem_cap),
-            "io": node.spec.io_seq / (1.0 + self.cfg.io_gamma * max(0, io_active - 1)),
-        }
+        occ = 1.0 - na.free_cores / na.cores
+        smt = 1.0 - cfg.smt_penalty * np.maximum(0.0, occ - 0.5) / 0.5
+        slow = na.slow * na.app_factor
+        cpu = na.cpu_speed * slow * smt
+        mem = na.mem_static * slow * na.bw_scale / np.minimum(
+            1.0 + cfg.mem_beta * np.maximum(0, na.n_running - 1), cfg.mem_cap)
+        io = na.io_seq / (1.0 + cfg.io_gamma * max(0, len(self.running) - 1))
+        return cpu, mem, io
 
-    def _time_left(self, task: TaskInstance) -> float:
-        rates = self._rates(task)
-        return sum(task.remaining[f] / rates[f] for f in ("cpu", "mem", "io"))
+    def _time_left_active(self, idx: np.ndarray) -> np.ndarray:
+        """Time-to-finish for the active slots `idx`, in slot order."""
+        cpu, mem, io = self._node_rates()
+        nd = self._slot_node[idx]
+        rem = self._rem[idx]
+        with np.errstate(divide="ignore"):
+            return rem[:, 0] / cpu[nd] + rem[:, 1] / mem[nd] + rem[:, 2] / io[nd]
 
+    def _advance_active(self, dt, idx: np.ndarray, tl: np.ndarray):
+        if dt <= 0 or idx.size == 0:
+            return
+        with np.errstate(divide="ignore", invalid="ignore"):
+            frac = np.where(tl > 0, np.minimum(dt / tl, 1.0), 1.0)
+        self._rem[idx] *= (1.0 - frac)[:, None]
+
+    # ------------------------------------------------------------- mechanics
     def _feasible(self, task: TaskInstance) -> dict:
-        feas = {n.name: (not n.disabled and n.free_cores >= task.req_cores
-                         and n.free_mem >= task.req_mem_gb)
-                for n in self.nodes.values()}
+        na = self._na
+        ok = (~na.disabled) & (na.free_cores >= task.req_cores) \
+            & (na.free_mem >= task.req_mem_gb)
+        feas = dict(zip(na.names, ok.tolist()))
         if task.speculative_of:
             # a speculative copy must not land beside its (straggling) original
             orig = self.all_tasks.get(task.speculative_of)
@@ -139,27 +264,94 @@ class Engine:
                 feas[orig.node] = False
         return feas
 
+    def _alloc_slot(self) -> int:
+        if self._n_slots == self._slot_cap:
+            self._slot_cap *= 2
+            self._rem = np.resize(self._rem, (self._slot_cap, 3))
+            self._slot_node = np.resize(self._slot_node, self._slot_cap)
+            grown = np.zeros(self._slot_cap, bool)
+            grown[:self._n_slots] = self._slot_active[:self._n_slots]
+            self._slot_active = grown
+            self._slot_tasks.extend([None] * (self._slot_cap - len(self._slot_tasks)))
+        s = self._n_slots
+        self._n_slots += 1
+        return s
+
+    def _release_slot(self, instance: str):
+        s = self._task_slot.pop(instance)
+        self._slot_active[s] = False
+        self._slot_tasks[s] = None
+        self._n_active -= 1
+
+    def _maybe_compact(self):
+        """Drop dead slots once they dominate; stable order keeps the argmin
+        tie-break identical to the running-dict iteration order."""
+        if self._n_slots < 4096 or self._n_active * 4 >= self._n_slots:
+            return
+        live = np.flatnonzero(self._slot_active[:self._n_slots])
+        n = live.size
+        self._rem[:n] = self._rem[live]
+        self._slot_node[:n] = self._slot_node[live]
+        self._slot_active[:n] = True
+        self._slot_active[n:self._n_slots] = False
+        tasks = [self._slot_tasks[i] for i in live]
+        self._slot_tasks[:n] = tasks
+        for i in range(n, self._n_slots):
+            self._slot_tasks[i] = None
+        self._n_slots = n
+        self._task_slot = {t.instance: i for i, t in enumerate(tasks)}
+
     def _start(self, task: TaskInstance, node_name: str):
-        node = self.nodes[node_name]
-        node.free_cores -= task.req_cores
-        node.free_mem -= task.req_mem_gb
-        node.running.add(task.instance)
+        na = self._na
+        i = na.index[node_name]
+        na.free_cores[i] -= task.req_cores
+        na.free_mem[i] -= task.req_mem_gb
+        na.n_running[i] += 1
+        self.nodes[node_name].running.add(task.instance)
         task.state = "running"
         task.node = node_name
         task.start_t = self.t
-        task.remaining = dict(task.work)
+        task.remaining = dict(task.work)   # informational; SoA is the truth
+        s = self._alloc_slot()
+        for j, f in enumerate(_REM_FEATURES):
+            self._rem[s, j] = task.work[f]
+        self._slot_node[s] = i
+        self._slot_active[s] = True
+        self._slot_tasks[s] = task
+        self._task_slot[task.instance] = s
+        self._n_active += 1
         self.running[task.instance] = task
 
+    def _on_done(self, instance: str):
+        """Decrement dependency counters of everything waiting on `instance`."""
+        for d in self._dependents.get(instance, ()):
+            self._deps_left[d] -= 1
+            if self._deps_left[d] == 0:
+                t = self.all_tasks[d]
+                if t.state == "pending":
+                    if t.submit_t <= self.t:
+                        self._ready_batch.append(d)
+                    else:
+                        heapq.heappush(self._arrivals,
+                                       (t.submit_t, self._seq[d], d))
+
     def _finish(self, task: TaskInstance, record: bool = True):
-        node = self.nodes[task.node]
-        node.free_cores += task.req_cores
-        node.free_mem += task.req_mem_gb
-        node.running.discard(task.instance)
+        na = self._na
+        i = na.index[task.node]
+        na.free_cores[i] += task.req_cores
+        na.free_mem[i] += task.req_mem_gb
+        na.n_running[i] -= 1
+        self.nodes[task.node].running.discard(task.instance)
         self.running.pop(task.instance, None)
+        self._release_slot(task.instance)
         task.state = "done"
         task.end_t = self.t
+        task.remaining = None
         self.done[task.instance] = task
         self.assignments.append((task.name, task.node, task.start_t, task.end_t))
+        self._unfinished -= 1
+        if task.end_t > self._max_end:
+            self._max_end = task.end_t
         if record and task.speculative_of is None:
             total = sum(task.work.values()) or 1.0
             noise = lambda: 1.0 + self.rng.normal(0, self.cfg.usage_noise)
@@ -171,13 +363,17 @@ class Engine:
             self.db.add(TaskTrace(task.workflow, task.name, task.instance,
                                   task.run_id, task.node,
                                   self.t - task.start_t, usage))
+        self._on_done(task.instance)
 
     def _kill(self, task: TaskInstance, requeue: bool):
-        node = self.nodes[task.node]
-        node.free_cores += task.req_cores
-        node.free_mem += task.req_mem_gb
-        node.running.discard(task.instance)
+        na = self._na
+        i = na.index[task.node]
+        na.free_cores[i] += task.req_cores
+        na.free_mem[i] += task.req_mem_gb
+        na.n_running[i] -= 1
+        self.nodes[task.node].running.discard(task.instance)
         self.running.pop(task.instance, None)
+        self._release_slot(task.instance)
         if requeue:
             task.state = "ready"
             task.node = None
@@ -185,19 +381,51 @@ class Engine:
             self.queue.append(task)
         else:
             task.state = "killed"
+            self._unfinished -= 1
+
+    def _prepare(self):
+        """Build the dependency-counter state from the submitted task set.
+
+        Runs once per `run()`; intentionally evaluated over the *final*
+        contents of `all_tasks` so instance-id overwrites between multiple
+        `submit()` calls resolve exactly as the seed's per-event rescan did.
+        """
+        self._deps_left = {}
+        self._dependents = defaultdict(list)
+        self._ready_batch = []
+        self._arrivals = []
+        for iid, t in self.all_tasks.items():
+            if t.state != "pending":
+                continue
+            left = 0
+            for d in t.deps:
+                if d not in self.done:
+                    left += 1
+                    self._dependents[d].append(iid)
+            self._deps_left[iid] = left
+            if left == 0:
+                if t.submit_t <= self.t:
+                    self._ready_batch.append(iid)
+                else:
+                    heapq.heappush(self._arrivals,
+                                   (t.submit_t, self._seq[iid], iid))
+        self._unfinished = sum(1 for t in self.all_tasks.values()
+                               if t.state not in ("done", "killed"))
 
     def _promote_ready(self):
-        queued = {t.instance for t in self.queue}
-        for t in self.all_tasks.values():
-            if t.state == "pending" and t.submit_t <= self.t and \
-                    all(d in self.done or d in self._finished_names()
-                        for d in t.deps):
+        while self._arrivals and self._arrivals[0][0] <= self.t:
+            self._ready_batch.append(heapq.heappop(self._arrivals)[2])
+        if not self._ready_batch:
+            return
+        # promote in submission order: identical to the seed's in-order
+        # rescan of all_tasks (dict overwrites keep first-insert position)
+        batch = sorted(set(self._ready_batch), key=self._seq.__getitem__)
+        self._ready_batch.clear()
+        for iid in batch:
+            t = self.all_tasks[iid]
+            if t.state == "pending":
                 t.state = "ready"
-                if t.instance not in queued:
-                    self.queue.append(t)
-
-    def _finished_names(self):
-        return self.done
+                self.queue.append(t)
 
     def _schedule(self):
         self.queue = self.scheduler.order(self.queue, self.db)
@@ -223,12 +451,22 @@ class Engine:
                     task, instance=f"{task.instance}~spec{next(self._uid)}",
                     state="ready", node=None, remaining=None,
                     speculative_of=task.instance)
+                self._seq[copy.instance] = next(self._seq_counter)
                 self.all_tasks[copy.instance] = copy
+                self._deps_left[copy.instance] = 0
+                self._unfinished += 1
                 self.queue.append(copy)
                 self._spec_copies[task.instance] = copy.instance
 
+    def _disable_node(self, name: str):
+        node = self.nodes[name]
+        node.disabled = True
+        for tid in list(node.running):
+            self._kill(self.running[tid], requeue=True)
+
     # ------------------------------------------------------------------ run
     def run(self, max_t: float = 10_000_000.0) -> dict:
+        self._prepare()
         self._failures.sort()
         fail_i = 0
         while True:
@@ -236,19 +474,32 @@ class Engine:
             self._schedule()
             self._maybe_speculate()
             if not self.running:
-                if any(t.state in ("pending", "ready") for t in self.all_tasks.values()):
-                    # deadlock or all nodes disabled: advance past next failure
-                    if fail_i < len(self._failures):
-                        self.t = self._failures[fail_i][1]
-                    else:
-                        raise RuntimeError("tasks stuck with no runnable node")
-                else:
+                if self._unfinished == 0:
                     break
+                # nothing running but work remains: jump to the next
+                # exogenous event (node failure or delayed submission)
+                next_fail = self._failures[fail_i][0] \
+                    if fail_i < len(self._failures) else None
+                next_arr = self._arrivals[0][0] if self._arrivals else None
+                if next_fail is None and next_arr is None:
+                    raise RuntimeError("tasks stuck with no runnable node")
+                if next_arr is not None and \
+                        (next_fail is None or next_arr <= next_fail):
+                    self.t = max(self.t, next_arr)
+                else:
+                    ft, fnode = self._failures[fail_i]
+                    fail_i += 1
+                    self.t = max(self.t, ft)
+                    self._disable_node(fnode)
+                continue
             # next event: earliest finishing task, next failure, or the next
             # speculation check (without it the loop can jump straight past
             # the straggler threshold)
-            finish_times = {tid: self._time_left(t) for tid, t in self.running.items()}
-            tid_min, dt = min(finish_times.items(), key=lambda kv: kv[1])
+            idx = np.flatnonzero(self._slot_active[:self._n_slots])
+            tl = self._time_left_active(idx)
+            j = int(np.argmin(tl))          # first min == dict-order tie-break
+            dt = tl[j]
+            finishing: Optional[TaskInstance] = self._slot_tasks[idx[j]]
             if self.cfg.speculation:
                 for t_ in self.running.values():
                     if t_.speculative_of or t_.instance in self._spec_copies:
@@ -258,42 +509,30 @@ class Engine:
                         wake = (t_.start_t + self.cfg.speculation_factor * p95
                                 + 1e-6) - self.t
                         if 0 < wake < dt:
-                            tid_min, dt = None, wake
+                            finishing, dt = None, wake
             t_next = self.t + dt
             if fail_i < len(self._failures) and self._failures[fail_i][0] < t_next:
                 ft, fnode = self._failures[fail_i]
-                dt = max(ft - self.t, 0.0)
-                self._advance(dt)
+                self._advance_active(max(ft - self.t, 0.0), idx, tl)
                 self.t = ft
                 fail_i += 1
-                node = self.nodes[fnode]
-                node.disabled = True
-                for tid in list(node.running):
-                    self._kill(self.running[tid], requeue=True)
+                self._disable_node(fnode)
                 continue
-            self._advance(dt)
-            self.t = t_next
-            if tid_min is None:        # speculation wake-up, nothing finished
+            self._advance_active(dt, idx, tl)
+            self.t = float(t_next)
+            if finishing is None:      # speculation wake-up, nothing finished
                 continue
-            task = self.running[tid_min]
+            task = finishing
             self._finish(task)
             # speculative pair resolution: first finisher wins
             other = self._spec_copies.pop(task.speculative_of or task.instance, None)
             if task.speculative_of and task.speculative_of in self.running:
                 self._kill(self.running[task.speculative_of], requeue=False)
                 self.done[task.speculative_of] = task  # result available
+                self._on_done(task.speculative_of)
             elif other and other in self.running:
                 self._kill(self.running[other], requeue=False)
+            self._maybe_compact()
             if self.t > max_t:
                 raise RuntimeError("simulation exceeded max_t")
-        makespan = max((t.end_t for t in self.done.values()), default=0.0)
-        return {"makespan": makespan, "assignments": self.assignments}
-
-    def _advance(self, dt: float):
-        if dt <= 0:
-            return
-        for task in self.running.values():
-            left = self._time_left(task)
-            frac = min(dt / left, 1.0) if left > 0 else 1.0
-            for f in task.remaining:
-                task.remaining[f] *= (1.0 - frac)
+        return {"makespan": self._max_end, "assignments": self.assignments}

@@ -1,0 +1,89 @@
+"""The vectorized engine must reproduce the frozen seed engine bit-for-bit.
+
+Every combination of paper cluster x scheduler runs the same workflow on
+both implementations; makespans and full assignment traces (task, node,
+start, end) must be *identical floats*, not merely close — the refactor
+preserved the seed's floating-point evaluation order.  Speculation and
+node-failure paths are covered separately.
+"""
+import dataclasses
+
+import pytest
+
+from repro.core.monitor import TraceDB
+from repro.core.scheduler import SCHEDULERS, make_scheduler
+from repro.workflow import engine, engine_ref
+from repro.workflow.cluster import CLUSTERS
+from repro.workflow.nfcore import WORKFLOWS
+
+
+def _run(engine_mod, cluster, sched_name, cfg, *, workflows=("viralrecon",),
+         fail=None, slow=None, runs=1):
+    """Run `runs` back-to-back runs sharing a TraceDB (history accumulates
+    exactly like the paper protocol); return everything comparable."""
+    specs = CLUSTERS[cluster]()
+    db = TraceDB()
+    out = []
+    for idx in range(runs):
+        sched = make_scheduler(sched_name, specs, seed=idx * 7 + 3)
+        eng = engine_mod.Engine(specs, sched, db,
+                                dataclasses.replace(cfg, seed=idx))
+        if slow:
+            eng.nodes[slow].slow_factor = 0.05
+        for w_i, wf in enumerate(workflows):
+            eng.submit(WORKFLOWS[wf](), run_id=idx, seed=11 + 2 * w_i)
+        if fail:
+            eng.fail_node_at(*fail)
+        res = eng.run()
+        out.append((res["makespan"], res["assignments"],
+                    sorted((t.instance, t.state) for t in eng.all_tasks.values())))
+    return out
+
+
+def _assert_identical(a, b):
+    assert len(a) == len(b)
+    for (mk_a, asg_a, st_a), (mk_b, asg_b, st_b) in zip(a, b):
+        assert mk_a == mk_b                      # exact float equality
+        assert asg_a == asg_b                    # full trace, exact floats
+        assert st_a == st_b
+
+
+@pytest.mark.parametrize("cluster", ["5;5;5", "5;4;4;2"])
+@pytest.mark.parametrize("sched", SCHEDULERS)
+def test_equivalence_all_schedulers(cluster, sched):
+    cfg = engine.EngineConfig(seed=0)
+    ref_cfg = engine_ref.EngineConfig(seed=0)
+    _assert_identical(
+        _run(engine, cluster, sched, cfg, runs=2),
+        _run(engine_ref, cluster, sched, ref_cfg, runs=2))
+
+
+def test_equivalence_multi_workflow():
+    cfg = engine.EngineConfig(seed=0)
+    ref_cfg = engine_ref.EngineConfig(seed=0)
+    _assert_identical(
+        _run(engine, "5;5;5", "tarema", cfg,
+             workflows=("viralrecon", "cageseq")),
+        _run(engine_ref, "5;5;5", "tarema", ref_cfg,
+             workflows=("viralrecon", "cageseq")))
+
+
+def test_equivalence_node_failure():
+    cfg = engine.EngineConfig(seed=0)
+    ref_cfg = engine_ref.EngineConfig(seed=0)
+    for cluster, node in (("5;5;5", "a-c2-0"), ("5;4;4;2", "b-n2-1")):
+        _assert_identical(
+            _run(engine, cluster, "fair", cfg, fail=(50.0, node)),
+            _run(engine_ref, cluster, "fair", ref_cfg, fail=(50.0, node)))
+
+
+def test_equivalence_speculation():
+    """History-warmed second run with a crippled node and speculation on:
+    the speculative-copy launch/kill path must match the seed exactly."""
+    cfg = engine.EngineConfig(seed=0, speculation=True, speculation_factor=1.5)
+    ref_cfg = engine_ref.EngineConfig(seed=0, speculation=True,
+                                      speculation_factor=1.5)
+    slow = make_scheduler("fillnodes", CLUSTERS["5;5;5"](), seed=3).nodes[0]
+    _assert_identical(
+        _run(engine, "5;5;5", "fillnodes", cfg, slow=slow, runs=2),
+        _run(engine_ref, "5;5;5", "fillnodes", ref_cfg, slow=slow, runs=2))

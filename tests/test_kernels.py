@@ -90,3 +90,30 @@ def test_kmeans_assign(N, f, k):
     wl, wd = ref.kmeans_assign(x, c)
     assert int(jnp.sum(lab != wl)) == 0
     np.testing.assert_allclose(np.asarray(dist), np.asarray(wd), atol=1e-3)
+
+
+@pytest.mark.parametrize("N,f,k", [(1024, 8, 4), (2048, 16, 8), (512, 6, 3),
+                                   (4096, 6, 6)])
+def test_kmeans_lloyd_step_fused(N, f, k):
+    """Fused labels+sums+counts pass == assignment + one-hot reduction."""
+    x, c = _arr(N, f), _arr(k, f)
+    lab, dist, sums, cnt = ops.kmeans_lloyd_step(x, c)
+    wl, wd, ws, wc = ref.kmeans_lloyd_step(x, c)
+    assert int(jnp.sum(lab != wl)) == 0
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(wd), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(cnt), np.asarray(wc), rtol=0)
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(ws),
+                               atol=1e-3, rtol=1e-5)
+    assert float(jnp.sum(cnt)) == N   # every point lands in exactly one cluster
+
+
+def test_kmeans_lloyd_step_multiblock_accumulation():
+    """Accumulation across grid steps: one-block and four-block launches of
+    the same problem must agree exactly on sums/counts."""
+    from repro.kernels import kmeans as km
+    x, c = _arr(512, 8), _arr(4, 8)
+    lab1, d1, s1, c1 = km.kmeans_lloyd_step(x, c, block_n=512, interpret=True)
+    lab4, d4, s4, c4 = km.kmeans_lloyd_step(x, c, block_n=128, interpret=True)
+    assert int(jnp.sum(lab1 != lab4)) == 0
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c4), rtol=0)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s4), atol=1e-4)

@@ -2,10 +2,11 @@
 scoring allocation — including hypothesis properties on the invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import allocation, labeling
-from repro.core.clustering import choose_k, kmeans_pp, silhouette, standardize
+from repro.core.clustering import (choose_k, kmeans_pp, silhouette,
+                                   silhouette_blocked, standardize)
 from repro.core.monitor import TaskTrace, TraceDB
 from repro.core.profiler import profile_cluster_synthetic
 from repro.workflow.cluster import cluster_555, cluster_5442
@@ -45,6 +46,30 @@ def test_kmeans_partitions_everything(k, seed):
     assert labels.shape == (30,)
     assert set(labels.tolist()) <= set(range(k))
     assert float(inertia) >= 0.0
+
+
+def test_silhouette_blocked_matches_dense():
+    """The streamed silhouette must agree with the dense (n,n) one."""
+    rng = np.random.default_rng(3)
+    X = standardize(np.concatenate(
+        [rng.normal(c, 0.2, (70, 4)) for c in (0.0, 1.0, 3.0)]))
+    labels, _, _ = kmeans_pp(X, 3, jax.random.key(1))
+    dense = float(silhouette(X, labels, 3))
+    for block in (32, 64, 210):          # non-divisor blocks exercise padding
+        blocked = float(silhouette_blocked(X, labels, 3, block=block))
+        np.testing.assert_allclose(blocked, dense, atol=1e-5)
+
+
+def test_choose_k_fleet_scale_sampled():
+    """Above the sample threshold choose_k scores through the blocked path
+    (never a dense (n,n)) and still recovers the true k."""
+    rng = np.random.default_rng(5)
+    X = np.concatenate([rng.normal(c, 0.05, (4000, 3)) for c in (0.0, 1.0, 2.0)])
+    res = choose_k(X, k_max=5, restarts=2,
+                   silhouette_sample=2048, silhouette_block=512)
+    assert res["k"] == 3
+    assert res["labels"].shape == (12000,)
+    assert res["silhouette"] > 0.8
 
 
 # ---------------------------------------------------------------- labeling

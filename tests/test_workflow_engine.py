@@ -4,7 +4,7 @@ import dataclasses
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.monitor import TraceDB
 from repro.core.scheduler import SCHEDULERS, make_scheduler
@@ -51,9 +51,14 @@ def test_all_schedulers_complete_all_tasks():
 
 
 def test_contention_slows_down():
-    """Same work, co-located vs alone -> co-located must be slower."""
-    one = WorkflowSpec("one", [AbstractTask("t", 1, {"cpu": 1000, "mem": 2000, "io": 10}, 1.0)])
-    many = WorkflowSpec("many", [AbstractTask("t", 4, {"cpu": 1000, "mem": 2000, "io": 10}, 1.0)])
+    """Same work, co-located vs alone -> co-located must be slower.
+
+    Memory-dominated work: instance jitter in `instantiate` is seeded by the
+    (process-salted) name hash, and with the original cpu-heavy mix the
+    slowdown ratio dipped to ~1.20 on ~1/30 hash salts — a flaky margin.
+    Bandwidth-bound work keeps the worst observed ratio above 1.33."""
+    one = WorkflowSpec("one", [AbstractTask("t", 1, {"cpu": 500, "mem": 4000, "io": 10}, 1.0)])
+    many = WorkflowSpec("many", [AbstractTask("t", 4, {"cpu": 500, "mem": 4000, "io": 10}, 1.0)])
     _, r1, _ = _run("fillnodes", one)
     _, r2, _ = _run("fillnodes", many)   # fillnodes packs them on one node
     assert r2["makespan"] > r1["makespan"] * 1.2
