@@ -27,12 +27,25 @@ def geomean(xs):
 def run_series(cluster: str, workflow: str, scheduler: str, runs: int = RUNS,
                seed0: int = 3, engine_cfg: EngineConfig | None = None,
                disabled=None, extra_workflow: str | None = None,
-               warmup: int = 0):
+               warmup: int = 0, tenant_tag: bool = False,
+               workflow_seeds: dict | None = None):
     """Paper protocol: a fresh TraceDB per scheduler-workflow pair (the DB is
     deleted between pairs), run `runs` times; Tarema/SJFN accumulate history
     across the runs of a pair (A3: recurring workflows).  ``warmup`` runs are
     executed but not measured (the paper's 'initial run ... is not part of
-    the benchmark')."""
+    the benchmark').
+
+    ``tenant_tag=True`` treats every workflow as its own tenant and
+    namespaces its instances — same-named tasks of the two workflows (e.g.
+    both define ``fastqc``) then run separately instead of overwriting each
+    other, and per-run ``records`` (the engine's assignment log) support the
+    fairness accounting in ``repro.core.fairness``.
+
+    ``workflow_seeds`` overrides the per-workflow instantiation seed
+    (default: 11 for the primary, 13 for the extra).  An isolated-baseline
+    run must pass the seed its workflow had in the shared run, or the
+    baseline simulates *different* task-work jitter and every slowdown
+    derived from it is biased."""
     specs = CLUSTERS[cluster]()
     db = TraceDB()
     out = []
@@ -42,13 +55,22 @@ def run_series(cluster: str, workflow: str, scheduler: str, runs: int = RUNS,
         cfg = engine_cfg or EngineConfig()
         eng = Engine(specs, sched, db, dataclasses.replace(cfg, seed=idx),
                      disabled_nodes=disabled)
-        eng.submit(WORKFLOWS[workflow](), run_id=idx, seed=11)
+        tag = (lambda wf: {"tenant": wf, "prefix": wf}) if tenant_tag \
+            else (lambda wf: {})
+        seeds = {workflow: 11}
         if extra_workflow:
-            eng.submit(WORKFLOWS[extra_workflow](), run_id=idx, seed=13)
+            seeds[extra_workflow] = 13
+        seeds.update(workflow_seeds or {})
+        eng.submit(WORKFLOWS[workflow](), run_id=idx, seed=seeds[workflow],
+                   **tag(workflow))
+        if extra_workflow:
+            eng.submit(WORKFLOWS[extra_workflow](), run_id=idx,
+                       seed=seeds[extra_workflow], **tag(extra_workflow))
         res = eng.run()
         if r < 0:
             continue
-        rec = {"makespan": res["makespan"], "assignments": res["assignments"]}
+        rec = {"makespan": res["makespan"], "assignments": res["assignments"],
+               "records": eng.assignment_log}
         if extra_workflow:
             per_wf = {}
             for t in eng.done.values():

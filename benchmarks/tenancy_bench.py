@@ -1,0 +1,142 @@
+"""Multi-tenant fleet benchmark: 8 workflow streams sharing a 256-node cluster.
+
+Every scheduler (the paper's five plus weighted-tarema) runs the same
+tenant mix — 8 recurring nf-core streams with Poisson/staggered arrivals,
+two double-weight tenants — through one shared engine, then each tenant's
+stream alone on the idle cluster as the isolated baseline.  Reported per
+scheduler:
+
+  * per-tenant slowdown (shared response / isolated response, mean over the
+    stream's runs) and SLO attainment (runs within 2x isolated);
+  * Jain's fairness index over normalized tenant progress (1/slowdown) and
+    over raw + weight-normalized core-seconds of service;
+  * per-tenant share of each machine tier's allocated core-seconds (the
+    restricted-resources split of fig. 8, at fleet scale);
+  * makespan, response-time sum, and engine wall time.
+
+Emits ``benchmarks/results/BENCH_tenancy.json`` (committed trajectory, like
+``BENCH_engine.json``).
+
+    PYTHONPATH=src python -m benchmarks.tenancy_bench [--quick] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import fairness
+from repro.core.monitor import TraceDB
+from repro.core.scheduler import TENANT_SCHEDULERS, make_scheduler
+from repro.workflow import tenancy
+from repro.workflow.engine import Engine, EngineConfig
+from benchmarks.engine_bench import fleet_cluster
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+OUT_PATH = os.path.join(RESULTS, "BENCH_tenancy.json")
+
+N_NODES = 256
+N_TENANTS = 8
+SLO_FACTOR = 2.0
+
+
+def _mk_scheduler(name: str, specs, seed: int, weights: dict):
+    kw = {"weights": weights} if name == "weighted-tarema" else {}
+    return make_scheduler(name, specs, seed=seed, **kw)
+
+
+def _run_stream(specs, sched_name: str, tenants, weights, seed: int,
+                only: str | None = None):
+    """One engine run of the (possibly restricted-to-one-tenant) stream."""
+    db = TraceDB()
+    eng = Engine(specs, _mk_scheduler(sched_name, specs, seed, weights), db,
+                 EngineConfig(seed=seed))
+    tenancy.submit_stream(eng, tenants, seed=seed, only=only)
+    t0 = time.perf_counter()
+    res = eng.run()
+    wall = time.perf_counter() - t0
+    return eng.assignment_log, res["makespan"], wall
+
+
+def bench_scheduler(sched_name: str, specs, tenants, node_group,
+                    seed: int = 0) -> dict:
+    weights = tenancy.tenant_weights(tenants)
+    shared_log, makespan, wall = _run_stream(
+        specs, sched_name, tenants, weights, seed)
+    iso_log = []
+    iso_wall = 0.0
+    for tn in tenants:
+        log, _, w = _run_stream(specs, sched_name, tenants, weights, seed,
+                                only=tn.name)
+        iso_log.extend(log)
+        iso_wall += w
+    rep = fairness.fairness_report(shared_log, iso_log, node_group,
+                                   slo_factor=SLO_FACTOR)
+    responses = [r for (_, _, r) in fairness.response_times(shared_log).values()]
+    jain_weighted = fairness.jains_index(
+        [rep.core_seconds.get(t.name, 0.0) / t.weight for t in tenants])
+    return {
+        "scheduler": sched_name,
+        "n_nodes": len(specs),
+        "n_tenants": len(tenants),
+        "tasks_completed": len(shared_log),
+        "makespan": round(makespan, 2),
+        "response_sum": round(float(np.sum(responses)), 2),
+        "wall_s": round(wall, 3),
+        "isolated_wall_s": round(iso_wall, 3),
+        "slowdown": {t: round(s, 4) for t, s in rep.slowdown.items()},
+        "jain_slowdown": None if rep.jain_slowdown is None
+        else round(rep.jain_slowdown, 4),
+        "jain_core_seconds": round(rep.jain_core_seconds, 4),
+        "jain_weighted_service": round(jain_weighted, 4),
+        "slo_attainment": rep.slo_attainment,
+        "group_share": {t: {g: round(x, 4) for g, x in gs.items()}
+                        for t, gs in rep.group_share.items()},
+    }
+
+
+def main(quick: bool = False, out_path: str = OUT_PATH) -> dict:
+    print("tenancy_bench")
+    n_runs = 2 if quick else 6
+    # inter-arrival well under a stream's isolated response so consecutive
+    # runs of every tenant overlap and the 8 streams contend for the fleet
+    tenants = tenancy.default_tenants(N_TENANTS, n_runs=n_runs,
+                                      mean_interarrival=40.0)
+    specs = fleet_cluster(N_NODES)
+    node_group = {s.name: s.machine for s in specs}
+    results = []
+    for sched_name in TENANT_SCHEDULERS:
+        rec = bench_scheduler(sched_name, specs, tenants, node_group)
+        results.append(rec)
+        slow = " ".join(f"{t}={s:.2f}" for t, s in rec["slowdown"].items())
+        print(f"tenancy_bench/{N_NODES}x{rec['tasks_completed']}/{sched_name},"
+              f"{rec['wall_s'] * 1e6:.0f},jain_slowdown={rec['jain_slowdown']}"
+              f",slo={rec['slo_attainment']}")
+        print(f"#   slowdowns: {slow}")
+    summary = {
+        "meta": {"quick": quick, "n_nodes": N_NODES, "n_tenants": N_TENANTS,
+                 "n_runs_per_tenant": n_runs, "slo_factor": SLO_FACTOR,
+                 "generated_unix": int(time.time())},
+        "tenants": [{"name": t.name, "workflow": t.workflow,
+                     "weight": t.weight, "arrival": t.arrival}
+                    for t in tenants],
+        "results": results,
+    }
+    if os.path.dirname(out_path):
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(summary, f, indent=1)
+    print(f"# wrote {out_path}")
+    return summary
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: 2 runs per tenant instead of 6")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    main(quick=args.quick, out_path=args.out)

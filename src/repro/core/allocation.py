@@ -24,13 +24,46 @@ def score_matrix(group_labels, task_labels) -> jnp.ndarray:
     return jnp.sum(jnp.abs(t[:, None, :] - g[None, :, :]), axis=-1)
 
 
-def priority_groups(info: GroupInfo, task_labels: dict) -> list[int]:
-    """Groups ordered by (score asc, power desc) — the paper's priority list."""
+def task_scores(info: GroupInfo, task_labels: dict) -> np.ndarray:
+    """Per-group scores of one task's label vector (shared formula source;
+    one jnp dispatch — schedulers memoize the result per label vector)."""
     t = np.array([task_labels[f] for f in TASK_FEATURES], np.float64)
     g = np.stack([info.labels_vector(gi) for gi in range(info.n_groups)])
-    scores = np.asarray(score_matrix(g, t[None]))[0]
+    return np.asarray(score_matrix(g, t[None]))[0]
+
+
+def _rank_groups(info: GroupInfo, scores) -> list[int]:
+    """(score asc, power desc) — the paper's priority ordering."""
     return sorted(range(info.n_groups),
                   key=lambda gi: (scores[gi], -info.group_power[gi]))
+
+
+def priority_groups(info: GroupInfo, task_labels: dict) -> list[int]:
+    """Groups ordered by (score asc, power desc) — the paper's priority list."""
+    return _rank_groups(info, task_scores(info, task_labels))
+
+
+def weighted_priority_groups(info: GroupInfo, task_labels: dict,
+                             overuse: float, pressure: float = 1.0,
+                             base_scores: np.ndarray | None = None) -> list[int]:
+    """Tenant-aware variant of ``priority_groups`` (multi-tenant phase 3).
+
+    ``overuse`` is how far the task's tenant currently sits above its
+    weighted fair share of the cluster (<= 0 means at or under share, which
+    delegates to the paper's ordering unchanged).  An over-share tenant has
+    every group's score inflated proportionally to the group's power,
+    steering it toward weaker groups and leaving the strong ones for
+    under-served tenants.  ``base_scores`` lets the caller supply a
+    memoized ``task_scores`` result (it is overuse-independent) so the hot
+    path only pays the cheap numpy penalty + sort.
+    """
+    if overuse <= 0.0:
+        return priority_groups(info, task_labels)
+    if base_scores is None:
+        base_scores = task_scores(info, task_labels)
+    power = np.array([info.group_power[gi] for gi in range(info.n_groups)])
+    scores = base_scores + pressure * overuse * power
+    return _rank_groups(info, scores)
 
 
 def pick_node(info: GroupInfo, task_labels, node_load, feasible,

@@ -177,6 +177,14 @@ def choose_k(X, k_max: int = 6, key=None, restarts: int = 4,
     """
     X = standardize(X)
     n = X.shape[0]
+    if n < 3:
+        # degenerate profile sets (the k sweep needs 2 <= k <= n-1): a
+        # single node is its own group; two nodes get one group each —
+        # silhouette is undefined either way, reported as 0.0
+        labels = np.arange(n, dtype=np.int32)
+        return {"k": max(n, 1), "labels": labels,
+                "centers": np.asarray(X, np.float64), "silhouette": 0.0,
+                "per_k": {}}
     key = key if key is not None else jax.random.key(0)
     sample_idx = None
     if n > silhouette_sample:

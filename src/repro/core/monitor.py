@@ -29,6 +29,7 @@ class TaskTrace:
     node: str
     runtime_s: float
     usage: dict                           # TASK_FEATURES -> measured value
+    tenant: str = "default"               # multi-tenant stream tag
 
 
 class TraceDB:

@@ -22,6 +22,8 @@ import time
 
 import numpy as np
 
+from repro.core.seeding import stable_seed
+
 FEATURES = ("cpu", "mem", "io_seq_read", "io_seq_write", "io_rand_read",
             "io_rand_write")
 
@@ -62,7 +64,9 @@ class NodeProfile:
 
 
 def profile_node_synthetic(spec: NodeSpec, seed: int = 0) -> NodeProfile:
-    rng = np.random.default_rng((hash(spec.name) & 0xFFFF, seed))
+    # crc32-derived, not hash(): measurement noise must reproduce across
+    # processes (hash() of a str is salted per interpreter)
+    rng = np.random.default_rng((stable_seed(spec.name), seed))
     jitter = lambda v, rel: float(v * (1.0 + rng.uniform(-rel, rel)))
     feats = {
         "cpu": jitter(spec.cpu_speed, 0.02),

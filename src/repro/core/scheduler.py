@@ -12,6 +12,8 @@ Interface consumed by workflow.engine.Engine:
 """
 from __future__ import annotations
 
+from collections import defaultdict
+
 import numpy as np
 
 from repro.core import allocation, labeling
@@ -153,21 +155,139 @@ class TaremaScheduler(_ProfiledScheduler):
         self.rng = np.random.default_rng(seed + 1)
         self._priority_cache: dict = {}  # label vector -> group priority list
 
+    def _cached_priority(self, labels) -> list:
+        key = tuple(sorted(labels.items()))
+        priority = self._priority_cache.get(key)
+        if priority is None:
+            priority = allocation.priority_groups(self.info, labels)
+            self._priority_cache[key] = priority
+        return priority
+
     def select_node(self, task, nodes, feasible, db):
         labels = self.task_labels(db, task.workflow, task.name)
-        priority = None
-        if labels is not None:
-            key = tuple(sorted(labels.items()))
-            priority = self._priority_cache.get(key)
-            if priority is None:
-                priority = allocation.priority_groups(self.info, labels)
-                self._priority_cache[key] = priority
+        priority = self._cached_priority(labels) if labels is not None else None
         load = {n: nodes[n].load() for n in nodes}
         return allocation.pick_node(self.info, labels, load, feasible, self.rng,
                                     priority=priority)
 
 
-def make_scheduler(name: str, specs, seed: int = 0) -> Scheduler:
+class WeightedTaremaScheduler(TaremaScheduler):
+    """Tenant-weighted Tarema for multi-tenant streams (§V-F, tenancy.py).
+
+    Two additions over the paper's phase 3, both reducing to vanilla Tarema
+    when a single tenant owns the cluster:
+
+      * **queue order** is weighted-fair-queuing virtual time: every
+        successful placement charges its tenant ``cores * est_runtime /
+        weight`` (historic mean runtime from the monitor, 1.0 for unknown
+        tasks), and the queue drains lowest-virtual-time tenant first — a
+        backlogged heavy-weight tenant cannot lock out light ones;
+      * **group priority** folds current usage in: the tenant's live share
+        of running cores is compared against its weighted entitlement, and
+        an over-share tenant has group scores inflated by
+        ``pressure * overuse * group_power`` (see
+        ``allocation.weighted_priority_groups``), steering its surplus onto
+        weaker groups so the strong groups stay available for under-served
+        tenants.
+
+    Live usage is reconstructed from the nodes' running sets against the
+    allocations this scheduler made (lazily purged), so per-placement work
+    stays O(running tasks) = O(nodes) — within the ROADMAP budget.
+    """
+    name = "weighted-tarema"
+
+    def __init__(self, specs, seed: int = 0, weights: dict | None = None,
+                 pressure: float = 1.0, share_tolerance: float = 0.02):
+        super().__init__(specs, seed)
+        self.weights = dict(weights or {})
+        self.pressure = pressure
+        self.share_tolerance = share_tolerance
+        self._virtual = defaultdict(float)   # tenant -> served work / weight
+        self._alloc = {}                     # instance -> (tenant, cores, node)
+        # label vector -> base task_scores; bounded by the few distinct
+        # label combinations (values 1..n_groups per feature)
+        self._scores_cache: dict = {}
+
+    def _weight(self, tenant: str) -> float:
+        return float(self.weights.get(tenant, 1.0))
+
+    def order(self, queue, db):
+        # stable sort: under-served tenants first, submission order within
+        return sorted(queue,
+                      key=lambda t: self._virtual[getattr(t, "tenant", "default")])
+
+    def _live_cores(self, nodes) -> dict:
+        """Running cores per tenant from this scheduler's own allocations,
+        purging entries whose instance already left its node."""
+        used: dict = defaultdict(float)
+        dead = []
+        for iid, (tenant, cores, node) in self._alloc.items():
+            if iid in nodes[node].running:
+                used[tenant] += cores
+            else:
+                dead.append(iid)
+        for iid in dead:
+            del self._alloc[iid]
+        return used
+
+    def _overuse(self, tenant: str, nodes) -> float:
+        used = self._live_cores(nodes)
+        total = sum(used.values())
+        if total <= 0.0:
+            return 0.0
+        wsum = sum(self._weight(t) for t in set(used) | {tenant})
+        entitled = self._weight(tenant) / wsum if wsum > 0 else 1.0
+        return used.get(tenant, 0.0) / total - entitled - self.share_tolerance
+
+    def select_node(self, task, nodes, feasible, db):
+        tenant = getattr(task, "tenant", "default")
+        labels = self.task_labels(db, task.workflow, task.name)
+        priority = None
+        if labels is not None:
+            overuse = self._overuse(tenant, nodes)
+            if overuse <= 0.0:
+                # at/under share this is exactly the paper's ordering, so
+                # reuse the parent's per-label-vector memo
+                priority = self._cached_priority(labels)
+            else:
+                # base scores are overuse-independent: memoize the jnp
+                # dispatch, pay only the numpy penalty + sort per placement
+                key = tuple(sorted(labels.items()))
+                base = self._scores_cache.get(key)
+                if base is None:
+                    base = allocation.task_scores(self.info, labels)
+                    self._scores_cache[key] = base
+                priority = allocation.weighted_priority_groups(
+                    self.info, labels, overuse, self.pressure,
+                    base_scores=base)
+        load = {n: nodes[n].load() for n in nodes}
+        node = allocation.pick_node(self.info, labels, load, feasible,
+                                    self.rng, priority=priority)
+        if node is not None:
+            # WFQ-charge each logical task once: re-placements after a node
+            # failure and speculative copies are not new demand, and must
+            # not push their (victim) tenant further back in the queue.
+            # The charged flag lives on the task object so its lifetime is
+            # exactly the instance's (no unbounded scheduler-side set).
+            if not getattr(task, "_wfq_charged", False) \
+                    and not task.speculative_of:
+                est = db.mean_runtime(task.workflow, task.name) or 1.0
+                # stride-scheduling catch-up: an idle/late tenant resumes at
+                # the active tenants' virtual-time floor instead of from its
+                # stale (tiny) value, so banked idle time cannot be spent
+                # monopolizing the queue on arrival
+                active = {t for (t, _, _) in self._alloc.values()} - {tenant}
+                floor = min((self._virtual[t] for t in active),
+                            default=self._virtual[tenant])
+                self._virtual[tenant] = \
+                    max(self._virtual[tenant], floor) \
+                    + task.req_cores * est / self._weight(tenant)
+                task._wfq_charged = True
+            self._alloc[task.instance] = (tenant, task.req_cores, node)
+        return node
+
+
+def make_scheduler(name: str, specs, seed: int = 0, **kw) -> Scheduler:
     names = [s.name for s in specs]
     if name == "roundrobin":
         return RoundRobinScheduler(names, seed)
@@ -179,8 +299,12 @@ def make_scheduler(name: str, specs, seed: int = 0) -> Scheduler:
         return SJFNScheduler(specs, seed)
     if name == "tarema":
         return TaremaScheduler(specs, seed)
+    if name == "weighted-tarema":
+        return WeightedTaremaScheduler(specs, seed, **kw)
     raise ValueError(name)
 
 
 SCHEDULERS = ("roundrobin", "fair", "fillnodes", "sjfn", "tarema")
 BASELINES = ("roundrobin", "fair", "fillnodes")
+# the paper's five plus the multi-tenant extension (tenancy_bench sweeps these)
+TENANT_SCHEDULERS = SCHEDULERS + ("weighted-tarema",)

@@ -9,6 +9,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core.seeding import stable_seed  # noqa: F401  (re-exported)
+
 
 @dataclasses.dataclass
 class AbstractTask:
@@ -49,6 +51,7 @@ class TaskInstance:
     end_t: float = 0.0
     remaining: Optional[dict] = None
     speculative_of: Optional[str] = None
+    tenant: str = "default"          # multi-tenant stream tag (see tenancy.py)
 
 
 def instantiate(spec: WorkflowSpec, run_id: int, seed: int,
@@ -58,7 +61,7 @@ def instantiate(spec: WorkflowSpec, run_id: int, seed: int,
     Dependencies are all-to-all between abstract task levels (fork/join via
     files), matching the Nextflow channel model.
     """
-    rng = np.random.default_rng((abs(hash(spec.name)) & 0xFFFF, seed, run_id))
+    rng = np.random.default_rng((stable_seed(spec.name), seed, run_id))
     run_scale = float(rng.lognormal(0.0, 0.05)) * input_scale
     instances: list[TaskInstance] = []
     by_task: dict[str, list[str]] = {}

@@ -30,7 +30,10 @@ in the seed so results match bit-for-bit, not just statistically.
 Fault-tolerance features (beyond-paper, used by the FT tests/examples):
   * node failure injection — running tasks are re-queued, node leaves;
   * straggler injection + speculative re-execution (first copy to finish
-    wins), gated on the monitor's historic p95.
+    wins), gated on the monitor's historic p95.  A losing pair half that is
+    still queued runs redundantly under the seed-pinned default; set
+    ``EngineConfig.cancel_stale_speculative`` to drop it instead (found by
+    the property-based invariant suite).
 
 Known-broken seed paths fixed here (unreachable by the equivalence suite):
 the idle-with-pending-failure branch indexed the failure *node* instead of
@@ -48,6 +51,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core.fairness import AssignmentRecord
 from repro.core.monitor import TaskTrace, TraceDB
 from repro.core.profiler import NodeSpec
 from repro.workflow.dag import TaskInstance, WorkflowSpec, instantiate
@@ -152,6 +156,13 @@ class SimNode:
 class EngineConfig:
     speculation: bool = False
     speculation_factor: float = 1.8   # relaunch if runtime > factor * p95
+    # Cancel the losing half of a speculative pair while it is still
+    # *queued* (copy not yet placed, or primary requeued by a node failure
+    # after its copy won).  The seed leaves such losers in the queue to run
+    # redundantly — the invariant suite flags that as a duplicated
+    # completion — but its semantics are pinned bit-for-bit by the
+    # equivalence tests, so the fix is opt-in (default: seed behaviour).
+    cancel_stale_speculative: bool = False
     seed: int = 0
     usage_noise: float = 0.03
     mem_beta: float = MEM_SHARE_BETA
@@ -182,6 +193,10 @@ class Engine:
         self.done: dict[str, TaskInstance] = {}
         self.all_tasks: dict[str, TaskInstance] = {}
         self.assignments: list[tuple] = []       # (task_name, node, start, end)
+        # richer per-finish records (tenant, run identity, reservation) for
+        # fairness accounting; the seed-shaped `assignments` tuples stay
+        # untouched so the bit-for-bit equivalence suite keeps comparing them
+        self.assignment_log: list[AssignmentRecord] = []
         self._failures: list[tuple] = []         # (time, node)
         self._spec_copies: dict[str, str] = {}   # primary id -> copy id
         self._uid = itertools.count()
@@ -207,9 +222,23 @@ class Engine:
 
     # ------------------------------------------------------------ submission
     def submit(self, spec: WorkflowSpec, run_id: int, seed: int = 0,
-               at: float = 0.0, input_scale: float = 1.0):
+               at: float = 0.0, input_scale: float = 1.0,
+               tenant: str = "default", prefix: Optional[str] = None):
+        """Instantiate `spec` into the engine at time `at`.
+
+        ``tenant`` tags every instance (carried into the assignment log and
+        TaskTrace records for fairness accounting).  ``prefix`` namespaces
+        instance ids (``"{prefix}/align[3]"``): without it, same-named tasks
+        of different submissions *overwrite* each other (the seed semantics
+        the equivalence suite pins); streams of repeated or same-workflow
+        runs need the namespace to coexist in one engine.
+        """
         for inst in instantiate(spec, run_id, seed, input_scale):
             inst.submit_t = at
+            inst.tenant = tenant
+            if prefix is not None:
+                inst.instance = f"{prefix}/{inst.instance}"
+                inst.deps = tuple(f"{prefix}/{d}" for d in inst.deps)
             if inst.instance not in self._seq:
                 self._seq[inst.instance] = next(self._seq_counter)
             self.all_tasks[inst.instance] = inst
@@ -349,6 +378,10 @@ class Engine:
         task.remaining = None
         self.done[task.instance] = task
         self.assignments.append((task.name, task.node, task.start_t, task.end_t))
+        self.assignment_log.append(AssignmentRecord(
+            task.instance, task.name, task.workflow, task.run_id, task.tenant,
+            task.node, task.start_t, task.end_t, task.req_cores,
+            task.req_mem_gb, task.submit_t))
         self._unfinished -= 1
         if task.end_t > self._max_end:
             self._max_end = task.end_t
@@ -362,7 +395,8 @@ class Engine:
             }
             self.db.add(TaskTrace(task.workflow, task.name, task.instance,
                                   task.run_id, task.node,
-                                  self.t - task.start_t, usage))
+                                  self.t - task.start_t, usage,
+                                  tenant=task.tenant))
         self._on_done(task.instance)
 
     def _kill(self, task: TaskInstance, requeue: bool):
@@ -458,6 +492,23 @@ class Engine:
                 self.queue.append(copy)
                 self._spec_copies[task.instance] = copy.instance
 
+    def _drop_queued(self, instance: str) -> bool:
+        """Cancel a ready-but-not-started instance (speculative pair
+        resolution): remove it from the queue before it runs redundantly.
+        Only a task actually removed from the queue is marked killed —
+        anything else would leave a killed task schedulable (and its later
+        finish would drive ``_unfinished`` negative)."""
+        t = self.all_tasks.get(instance)
+        if t is None or t.state != "ready":
+            return False
+        try:
+            self.queue.remove(t)
+        except ValueError:      # not queued after all: leave it untouched
+            return False
+        t.state = "killed"
+        self._unfinished -= 1
+        return True
+
     def _disable_node(self, name: str):
         node = self.nodes[name]
         node.disabled = True
@@ -524,14 +575,28 @@ class Engine:
                 continue
             task = finishing
             self._finish(task)
-            # speculative pair resolution: first finisher wins
+            # speculative pair resolution: first finisher wins.  The loser
+            # may be running (seed semantics: kill it) or still *queued* —
+            # a copy the scheduler hasn't placed yet, or a primary requeued
+            # by a node failure while its copy ran.  The seed leaves queued
+            # losers to execute redundantly; `cancel_stale_speculative`
+            # drops them instead (see EngineConfig).
             other = self._spec_copies.pop(task.speculative_of or task.instance, None)
-            if task.speculative_of and task.speculative_of in self.running:
-                self._kill(self.running[task.speculative_of], requeue=False)
-                self.done[task.speculative_of] = task  # result available
-                self._on_done(task.speculative_of)
-            elif other and other in self.running:
-                self._kill(self.running[other], requeue=False)
+            if task.speculative_of:
+                orig = task.speculative_of
+                if orig in self.running:
+                    self._kill(self.running[orig], requeue=False)
+                    self.done[orig] = task  # result available
+                    self._on_done(orig)
+                elif self.cfg.cancel_stale_speculative \
+                        and self._drop_queued(orig):
+                    self.done[orig] = task  # result available
+                    self._on_done(orig)
+            elif other:
+                if other in self.running:
+                    self._kill(self.running[other], requeue=False)
+                elif self.cfg.cancel_stale_speculative:
+                    self._drop_queued(other)
             self._maybe_compact()
             if self.t > max_t:
                 raise RuntimeError("simulation exceeded max_t")

@@ -1,0 +1,139 @@
+"""Multi-tenant workflow streams (§V-F: fair usage of shared clusters).
+
+The paper's multi-workflow experiment submits two workflows at t=0 and
+measures the runtime sum.  Real shared clusters see *streams*: every tenant
+repeatedly submits their recurring workflow over time.  This module
+generates those streams on top of the engine's ``submit(..., at=)`` hook:
+
+  * ``TenantSpec`` — one tenant: a recurring workflow, a scheduling weight,
+    and an arrival process (``poisson`` exponential inter-arrivals or
+    ``staggered`` fixed-interval submissions);
+  * ``arrival_times`` — the deterministic arrival sequence of one tenant
+    (crc32-seeded, so streams reproduce across processes);
+  * ``build_stream`` / ``submit_stream`` — materialize the per-run
+    submissions (sorted by arrival) and feed them into an engine.  Every
+    submission is namespaced ``{tenant}/r{run}`` so same-workflow runs
+    coexist, and tenant-tagged so the assignment log supports the fairness
+    accounting in ``repro.core.fairness``.
+
+``default_tenants`` builds the 8-stream mix used by ``benchmarks/
+tenancy_bench.py``: the five nf-core stand-ins cycled across tenants with a
+couple of heavier-weight tenants, the regime where weighted Tarema has
+something to arbitrate.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.workflow.dag import stable_seed
+from repro.workflow.nfcore import WORKFLOWS
+
+ARRIVALS = ("poisson", "staggered")
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant's recurring-workflow stream."""
+    name: str
+    workflow: str                     # key into nfcore.WORKFLOWS
+    weight: float = 1.0               # share weight (weighted-tarema)
+    n_runs: int = 4                   # submissions in the stream
+    arrival: str = "poisson"          # "poisson" | "staggered"
+    mean_interarrival: float = 60.0   # sim-seconds between submissions
+    offset: float = 0.0               # stream start time
+    input_scale: float = 1.0          # forwarded to dag.instantiate
+
+    def __post_init__(self):
+        if self.arrival not in ARRIVALS:
+            raise ValueError(f"unknown arrival process: {self.arrival!r}")
+        if self.workflow not in WORKFLOWS:
+            raise ValueError(f"unknown workflow: {self.workflow!r}")
+        if self.n_runs < 1:
+            raise ValueError(f"n_runs must be >= 1, got {self.n_runs}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Submission:
+    """One workflow run of a tenant's stream, ready to hand to Engine.submit."""
+    tenant: str
+    workflow: str
+    run_id: int
+    at: float
+    seed: int
+    weight: float
+    input_scale: float
+
+    @property
+    def prefix(self) -> str:
+        return f"{self.tenant}/r{self.run_id}"
+
+
+def arrival_times(tenant: TenantSpec, seed: int = 0) -> np.ndarray:
+    """The tenant's submission times, deterministic in (tenant.name, seed).
+
+    Poisson streams draw exponential inter-arrival gaps around
+    ``mean_interarrival``; staggered streams submit exactly every
+    ``mean_interarrival``.  Both start at ``offset``.
+    """
+    if tenant.arrival == "staggered":
+        gaps = np.full(tenant.n_runs, tenant.mean_interarrival, np.float64)
+    else:
+        rng = np.random.default_rng((stable_seed(tenant.name), seed))
+        gaps = rng.exponential(tenant.mean_interarrival, tenant.n_runs)
+    t = tenant.offset + np.cumsum(gaps) - gaps[0]   # first run at offset
+    return t
+
+
+def build_stream(tenants: list[TenantSpec], seed: int = 0) -> list[Submission]:
+    """All tenants' submissions merged into one arrival-ordered stream."""
+    subs: list[Submission] = []
+    for tn in tenants:
+        times = arrival_times(tn, seed)
+        for r, at in enumerate(times):
+            subs.append(Submission(
+                tenant=tn.name, workflow=tn.workflow, run_id=r,
+                at=float(at), seed=stable_seed(tn.name) + 17 * r + seed,
+                weight=tn.weight, input_scale=tn.input_scale))
+    # arrival order (ties: tenant name, run) — submission order seeds the
+    # engine's promotion tie-break, so keep it deterministic
+    subs.sort(key=lambda s: (s.at, s.tenant, s.run_id))
+    return subs
+
+
+def submit_stream(engine, tenants: list[TenantSpec],
+                  seed: int = 0, only: str | None = None) -> list[Submission]:
+    """Feed a tenant mix into an engine; ``only`` restricts to one tenant
+    (the isolated-baseline protocol: identical arrivals, empty cluster).
+    Returns the submissions that were submitted."""
+    subs = [s for s in build_stream(tenants, seed)
+            if only is None or s.tenant == only]
+    for s in subs:
+        engine.submit(WORKFLOWS[s.workflow](), run_id=s.run_id, seed=s.seed,
+                      at=s.at, input_scale=s.input_scale,
+                      tenant=s.tenant, prefix=s.prefix)
+    return subs
+
+
+def tenant_weights(tenants: list[TenantSpec]) -> dict:
+    return {t.name: t.weight for t in tenants}
+
+
+def default_tenants(n: int = 8, n_runs: int = 4,
+                    mean_interarrival: float = 150.0) -> list[TenantSpec]:
+    """The tenancy-bench mix: `n` streams cycling the five nf-core
+    workflows; tenants 0 and 4 carry double weight and tenant 1 runs a
+    staggered (cron-like) schedule, the rest are Poisson."""
+    wf_names = list(WORKFLOWS)
+    out = []
+    for i in range(n):
+        out.append(TenantSpec(
+            name=f"tenant{i}",
+            workflow=wf_names[i % len(wf_names)],
+            weight=2.0 if i % 4 == 0 else 1.0,
+            n_runs=n_runs,
+            arrival="staggered" if i == 1 else "poisson",
+            mean_interarrival=mean_interarrival,
+            offset=5.0 * i))
+    return out

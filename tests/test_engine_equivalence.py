@@ -14,24 +14,56 @@ from repro.core.monitor import TraceDB
 from repro.core.scheduler import SCHEDULERS, make_scheduler
 from repro.workflow import engine, engine_ref
 from repro.workflow.cluster import CLUSTERS
+from repro.workflow.dag import AbstractTask, WorkflowSpec
 from repro.workflow.nfcore import WORKFLOWS
 
 
+def _wf_alpha():
+    """Toy long-runner with task names disjoint from `_wf_late` — the two
+    must coexist in one engine without the nf-core pairs' shared-`fastqc`
+    instance overwrites (which would leave the seed engine nothing to run
+    before the delayed arrival lands)."""
+    return WorkflowSpec("alpha", [
+        AbstractTask("a_scan", 8, {"cpu": 20000.0, "mem": 600.0, "io": 60.0}, 2.0),
+        AbstractTask("a_fold", 8, {"cpu": 30000.0, "mem": 900.0, "io": 40.0}, 2.5,
+                     deps=("a_scan",)),
+        AbstractTask("a_join", 2, {"cpu": 9000.0, "mem": 300.0, "io": 30.0}, 1.5,
+                     deps=("a_fold",)),
+    ])
+
+
+def _wf_late():
+    return WorkflowSpec("late", [
+        AbstractTask("l_prep", 6, {"cpu": 12000.0, "mem": 500.0, "io": 30.0}, 1.8),
+        AbstractTask("l_sum", 3, {"cpu": 8000.0, "mem": 250.0, "io": 20.0}, 1.2,
+                     deps=("l_prep",)),
+    ])
+
+
+_TOY = {"alpha": _wf_alpha, "late": _wf_late}
+
+
 def _run(engine_mod, cluster, sched_name, cfg, *, workflows=("viralrecon",),
-         fail=None, slow=None, runs=1):
+         fail=None, slow=None, runs=1, disabled=None, at=()):
     """Run `runs` back-to-back runs sharing a TraceDB (history accumulates
-    exactly like the paper protocol); return everything comparable."""
+    exactly like the paper protocol); return everything comparable.
+
+    ``disabled`` pre-disables nodes (the fig8 restricted protocol); ``at``
+    gives per-workflow submission delays for ``submit(..., at=t)``."""
     specs = CLUSTERS[cluster]()
     db = TraceDB()
     out = []
     for idx in range(runs):
         sched = make_scheduler(sched_name, specs, seed=idx * 7 + 3)
         eng = engine_mod.Engine(specs, sched, db,
-                                dataclasses.replace(cfg, seed=idx))
+                                dataclasses.replace(cfg, seed=idx),
+                                disabled_nodes=disabled)
         if slow:
             eng.nodes[slow].slow_factor = 0.05
         for w_i, wf in enumerate(workflows):
-            eng.submit(WORKFLOWS[wf](), run_id=idx, seed=11 + 2 * w_i)
+            delay = at[w_i] if w_i < len(at) else 0.0
+            spec = (WORKFLOWS.get(wf) or _TOY[wf])()
+            eng.submit(spec, run_id=idx, seed=11 + 2 * w_i, at=delay)
         if fail:
             eng.fail_node_at(*fail)
         res = eng.run()
@@ -75,6 +107,50 @@ def test_equivalence_node_failure():
         _assert_identical(
             _run(engine, cluster, "fair", cfg, fail=(50.0, node)),
             _run(engine_ref, cluster, "fair", ref_cfg, fail=(50.0, node)))
+
+
+def _restricted(cluster: str, frac: float) -> set:
+    """fig8 protocol: disable `frac` of the machines in every node group."""
+    out = set()
+    by_machine: dict = {}
+    for s in CLUSTERS[cluster]():
+        by_machine.setdefault(s.machine, []).append(s.name)
+    for names in by_machine.values():
+        out.update(names[:int(round(frac * len(names)))])
+    return out
+
+
+@pytest.mark.parametrize("sched", ["fair", "tarema"])
+def test_equivalence_disabled_nodes(sched):
+    """The fig8 restricted-resources path (pre-disabled nodes) must match
+    the seed bit-for-bit — previously zero equivalence coverage."""
+    cfg = engine.EngineConfig(seed=0)
+    ref_cfg = engine_ref.EngineConfig(seed=0)
+    for cluster, frac in (("5;5;5", 0.4), ("5;4;4;2", 0.2)):
+        disabled = _restricted(cluster, frac)
+        _assert_identical(
+            _run(engine, cluster, sched, cfg, runs=2, disabled=disabled,
+                 workflows=("viralrecon", "cageseq")),
+            _run(engine_ref, cluster, sched, ref_cfg, runs=2,
+                 disabled=disabled, workflows=("viralrecon", "cageseq")))
+
+
+@pytest.mark.parametrize("sched", ["fair", "sjfn"])
+def test_equivalence_delayed_arrival(sched):
+    """`submit(..., at=t)` with the delayed workflow arriving while the
+    first still runs — the seed's per-event rescan promotes it mid-run and
+    the vectorized engine's arrival heap must reproduce that exactly."""
+    cfg = engine.EngineConfig(seed=0)
+    ref_cfg = engine_ref.EngineConfig(seed=0)
+    # (the seed engine cannot start idle, so the first workflow arrives at 0)
+    for at in ((0.0, 30.0), (0.0, 90.0)):
+        a = _run(engine, "5;5;5", sched, cfg, runs=2,
+                 workflows=("alpha", "late"), at=at)
+        b = _run(engine_ref, "5;5;5", sched, ref_cfg, runs=2,
+                 workflows=("alpha", "late"), at=at)
+        _assert_identical(a, b)
+        # the arrival really landed mid-run, not on an idle engine
+        assert a[0][0] > at[1]
 
 
 def test_equivalence_speculation():

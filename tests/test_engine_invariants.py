@@ -1,0 +1,177 @@
+"""Property-based engine invariants: random DAGs x clusters x schedulers.
+
+An instrumented Engine subclass asserts the safety invariants *during* the
+run (not just post-hoc): reservations never drive a node's free cores/mem
+negative, every placement lands on an enabled node that had room, and slot
+accounting stays consistent.  After the run: every non-speculative instance
+completes exactly once, all resources are restored, and every trace
+satisfies ``start < end <= makespan``.
+
+Runs through the ``tests/_hyp.py`` shim, so the suite works (deterministic
+fallback runner) with or without hypothesis installed.  Random cases cover
+delayed submissions (``submit(..., at=t)``), pre-disabled nodes, node
+failure injection, speculation, and all six schedulers.
+"""
+import numpy as np
+from _hyp import given, settings, st
+
+from repro.core.monitor import TraceDB
+from repro.core.profiler import NodeSpec
+from repro.core.scheduler import TENANT_SCHEDULERS, make_scheduler
+from repro.workflow.dag import AbstractTask, WorkflowSpec
+from repro.workflow.engine import Engine, EngineConfig
+
+
+class CheckedEngine(Engine):
+    """Engine that asserts safety invariants on every state transition."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.finish_counts: dict = {}
+
+    def _assert_capacity(self):
+        na = self._na
+        assert (na.free_cores >= 0).all(), "free cores went negative"
+        assert (na.free_mem >= -1e-9).all(), "free mem went negative"
+        assert (na.free_cores <= na.cores).all(), "cores over-released"
+        assert (na.free_mem <= na.mem_gb + 1e-9).all(), "mem over-released"
+        assert (na.n_running >= 0).all()
+
+    def _start(self, task, node_name):
+        node = self.nodes[node_name]
+        assert not node.disabled, f"placement on disabled node {node_name}"
+        assert node.free_cores >= task.req_cores, "placement without cores"
+        assert node.free_mem >= task.req_mem_gb - 1e-9, "placement without mem"
+        super()._start(task, node_name)
+        self._assert_capacity()
+
+    def _finish(self, task, record=True):
+        self.finish_counts[task.instance] = \
+            self.finish_counts.get(task.instance, 0) + 1
+        super()._finish(task, record)
+        self._assert_capacity()
+
+    def _kill(self, task, requeue):
+        super()._kill(task, requeue)
+        self._assert_capacity()
+
+
+def random_workflow(rng, name: str) -> WorkflowSpec:
+    n_stages = int(rng.integers(2, 5))
+    tasks = []
+    for s in range(n_stages):
+        width = int(rng.integers(1, 6))
+        deps = ()
+        if tasks:
+            n_deps = int(rng.integers(1, len(tasks) + 1))
+            deps = tuple(t.name for t in
+                         rng.choice(tasks, size=n_deps, replace=False))
+        tasks.append(AbstractTask(
+            f"{name}_s{s}", width,
+            {"cpu": float(rng.uniform(50, 2000)),
+             "mem": float(rng.uniform(10, 300)),
+             "io": float(rng.uniform(1, 50))},
+            peak_mem_gb=float(rng.uniform(0.5, 4.0)),
+            deps=deps,
+            req_cores=int(rng.integers(1, 5)),
+            req_mem_gb=float(rng.uniform(1.0, 8.0))))
+    return WorkflowSpec(name, tasks)
+
+
+def random_cluster(rng) -> list[NodeSpec]:
+    n = int(rng.integers(3, 9))
+    specs = []
+    for i in range(n):
+        tier = int(rng.integers(0, 3))
+        specs.append(NodeSpec(
+            f"r-m{tier}-{i}", f"m{tier}",
+            cores=int(rng.choice([4, 8, 16])),
+            mem_gb=float(rng.choice([16.0, 32.0, 64.0])),
+            cpu_speed=float(rng.uniform(300, 600)),
+            mem_bw=float(rng.uniform(12000, 20000)),
+            app_factor=float(rng.uniform(0.7, 1.05))))
+    return specs
+
+
+def _build_case(seed: int):
+    rng = np.random.default_rng(seed)
+    specs = random_cluster(rng)
+    sched_name = TENANT_SCHEDULERS[seed % len(TENANT_SCHEDULERS)]
+    speculation = bool(rng.integers(0, 2))
+    # strict mode: queued speculative losers are cancelled, so completion is
+    # exactly-once (the seed-pinned default would execute them redundantly)
+    cfg = EngineConfig(seed=seed, speculation=speculation,
+                       speculation_factor=1.5, cancel_stale_speculative=True)
+    disabled = None
+    if len(specs) > 3 and rng.random() < 0.4:
+        disabled = {specs[int(rng.integers(0, len(specs)))].name}
+    eng = CheckedEngine(specs, make_scheduler(sched_name, specs, seed=seed),
+                        TraceDB(), cfg, disabled_nodes=disabled)
+    eng.submit(random_workflow(rng, "wfa"), run_id=0, seed=seed,
+               tenant="ta", prefix="a")
+    if rng.random() < 0.7:   # delayed-arrival stream
+        eng.submit(random_workflow(rng, "wfb"), run_id=0, seed=seed + 1,
+                   at=float(rng.uniform(0.0, 60.0)), tenant="tb", prefix="b")
+    if rng.random() < 0.3:   # failure injection (keep >= 2 nodes alive)
+        alive = [s.name for s in specs if s.name not in (disabled or ())]
+        if len(alive) > 2:
+            eng.fail_node_at(float(rng.uniform(1.0, 30.0)),
+                             alive[int(rng.integers(0, len(alive)))])
+    return eng
+
+
+@given(st.integers(0, 10_000_000))
+@settings(max_examples=14, deadline=None)
+def test_engine_invariants(seed):
+    eng = _build_case(seed)
+    res = eng.run()
+    makespan = res["makespan"]
+
+    # every non-speculative instance completes exactly once: either the
+    # primary finished, or exactly one speculative copy finished for it
+    copies_won = {t.speculative_of for t in eng.all_tasks.values()
+                  if t.speculative_of and eng.finish_counts.get(t.instance, 0)}
+    for iid, task in eng.all_tasks.items():
+        if task.speculative_of is None:
+            assert iid in eng.done, f"{iid} never completed"
+            assert eng.finish_counts.get(iid, 0) \
+                + (1 if iid in copies_won else 0) == 1, \
+                f"{iid} not completed exactly once"
+    for iid, n in eng.finish_counts.items():
+        assert n == 1, f"{iid} finished {n} times"
+    if not eng.cfg.speculation:
+        assert all(t.state == "done" for t in eng.all_tasks.values())
+
+    # all resources restored after the run
+    for node in eng.nodes.values():
+        assert node.free_cores == node.spec.cores
+        assert abs(node.free_mem - node.spec.mem_gb) < 1e-6
+        assert not node.running
+
+    # every trace is well-formed and inside the makespan
+    assert len(res["assignments"]) == len(eng.assignment_log)
+    for rec in eng.assignment_log:
+        assert rec.start < rec.end <= makespan + 1e-9, rec
+        assert rec.end >= rec.submit_t
+        assert rec.node in eng.nodes
+        assert rec.tenant in ("ta", "tb")
+
+    # tenant tags survive into the monitor's traces
+    assert {t.tenant for t in eng.db.records} <= {"ta", "tb"}
+
+
+@given(st.integers(0, 10_000_000))
+@settings(max_examples=6, deadline=None)
+def test_engine_invariants_match_disabled_protocol(seed):
+    """Pre-disabled nodes never receive work, even across requeues."""
+    rng = np.random.default_rng(seed)
+    specs = random_cluster(rng)
+    dead = specs[int(rng.integers(0, len(specs)))].name
+    eng = CheckedEngine(specs,
+                        make_scheduler("fair", specs, seed=seed),
+                        TraceDB(), EngineConfig(seed=seed),
+                        disabled_nodes={dead})
+    eng.submit(random_workflow(rng, "wfa"), run_id=0, seed=seed)
+    res = eng.run()
+    assert all(node != dead for (_, node, _, _) in res["assignments"])
+    assert all(t.state == "done" for t in eng.all_tasks.values())

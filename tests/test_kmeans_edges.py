@@ -1,0 +1,99 @@
+"""choose_k / k-means edge cases: empty clusters mid-Lloyd and tiny (n < k)
+profile sets, with the fused Pallas Lloyd step validated against the
+kernels/ref.py oracle in interpret mode."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import labeling
+from repro.core.clustering import choose_k, kmeans_pp, standardize
+from repro.core.profiler import profile_cluster_synthetic
+from repro.kernels import ref
+from repro.kernels.kmeans import kmeans_lloyd_step
+from repro.workflow.cluster import cluster_555
+
+
+def test_kmeans_empty_cluster_during_lloyd():
+    """More centers than distinct blobs: some clusters necessarily empty.
+    The Lloyd update must keep those centers finite (no 0/0) and still
+    partition every point."""
+    rng = np.random.default_rng(0)
+    X = standardize(np.concatenate([rng.normal(c, 0.01, (16, 3))
+                                    for c in (0.0, 10.0)]))
+    labels, C, inertia = kmeans_pp(X, 5, jax.random.key(0))
+    labels = np.asarray(labels)
+    assert labels.shape == (32,)
+    assert set(labels.tolist()) <= set(range(5))
+    assert np.isfinite(np.asarray(C)).all(), "empty cluster produced NaN/inf"
+    assert np.isfinite(float(inertia)) and float(inertia) >= 0.0
+
+
+def test_lloyd_kernel_empty_cluster_matches_ref():
+    """Fused kernel vs oracle on a center set with a guaranteed-empty
+    cluster (one center far from every point): identical labels and
+    all-zero sums/counts for the empty cluster, in interpret mode."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(0.0, 1.0, (64, 4)), jnp.float32)
+    c = jnp.concatenate([jnp.asarray(rng.normal(0.0, 1.0, (3, 4)), jnp.float32),
+                         jnp.full((1, 4), 1e4, jnp.float32)])   # never nearest
+    lab_k, d_k, sums_k, cnt_k = kmeans_lloyd_step(x, c, block_n=16,
+                                                  interpret=True)
+    lab_r, d_r, sums_r, cnt_r = ref.kmeans_lloyd_step(x, c)
+    np.testing.assert_array_equal(np.asarray(lab_k), np.asarray(lab_r))
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_r),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sums_k), np.asarray(sums_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(cnt_k), np.asarray(cnt_r))
+    assert float(cnt_k[3]) == 0.0
+    np.testing.assert_array_equal(np.asarray(sums_k[3]), np.zeros(4))
+
+
+def test_kmeans_more_centers_than_points():
+    """k > n: duplicated seeds leave clusters empty from iteration one."""
+    rng = np.random.default_rng(2)
+    X = standardize(rng.normal(size=(3, 4)))
+    labels, C, inertia = kmeans_pp(X, 5, jax.random.key(2))
+    labels = np.asarray(labels)
+    assert set(labels.tolist()) <= set(range(5))
+    assert np.isfinite(np.asarray(C)).all()
+
+
+@pytest.mark.parametrize("n", [1, 2])
+def test_choose_k_tiny_profile_sets(n):
+    """n < 3 cannot sweep 2 <= k <= n-1: every node becomes its own group
+    (the seed implementation crashed here)."""
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(n, 6)) + 10.0
+    res = choose_k(X, k_max=6)
+    assert res["k"] == n
+    assert res["labels"].shape == (n,)
+    assert sorted(set(res["labels"].tolist())) == list(range(n))
+    assert res["silhouette"] == 0.0 and res["per_k"] == {}
+
+
+def test_choose_k_tiny_cluster_feeds_labeling():
+    """A 2-node cluster must flow through build_group_info (the profiled
+    schedulers' phase-1 path) without crashing."""
+    profiles = profile_cluster_synthetic(cluster_555()[:2], seed=0)
+    X = np.stack([p.vector() for p in profiles])
+    res = choose_k(X, k_max=6)
+    info = labeling.build_group_info(profiles, res["labels"])
+    assert info.n_groups == 2
+    assert sorted(len(v) for v in info.group_nodes.values()) == [1, 1]
+    for f in ("cpu", "mem", "io"):
+        ps = labeling.percentiles(info, f)
+        assert ps[0] == 0.0 and ps[-1] == 1.0
+
+
+def test_choose_k_three_profiles_sweeps_k2_only():
+    """n == 3 bounds the sweep at k == 2 (n-1) and still returns a valid
+    grouping."""
+    rng = np.random.default_rng(4)
+    X = np.concatenate([rng.normal(0.0, 0.01, (2, 3)),
+                        rng.normal(5.0, 0.01, (1, 3))])
+    res = choose_k(X, k_max=6)
+    assert res["k"] == 2
+    assert list(res["per_k"]) == [2]
