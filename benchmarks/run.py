@@ -26,7 +26,7 @@ def main() -> None:
     from benchmarks import (engine_bench, fig3_workflow_profiles,
                             fig45_runtimes, fig67_usage, fig8_multiworkflow,
                             kernel_bench, perf_variants, roofline,
-                            table4_profiling, tenancy_bench)
+                            sizing_bench, table4_profiling, tenancy_bench)
     suites = {
         "table4": table4_profiling.main,
         "fig3": fig3_workflow_profiles.main,
@@ -34,6 +34,7 @@ def main() -> None:
         "fig67": fig67_usage.main,
         "fig8": fig8_multiworkflow.main,
         "tenancy": tenancy_bench.main,
+        "sizing": sizing_bench.main,
         "roofline": roofline.main,
         "perf": perf_variants.main,
         "kernels": kernel_bench.main,

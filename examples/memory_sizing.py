@@ -1,0 +1,52 @@
+"""Online memory sizing in action: static vs percentile vs escalation.
+
+Runs the memory-heavy `eager` workflow three times per strategy on the
+paper's 5;5;5 cluster, sharing monitor history across runs exactly like the
+paper's repeated-execution protocol.  The static 5-GB request (the paper's
+protocol) genuinely OOMs eager's heaviest instances once OOM semantics are
+modelled; the percentile predictor learns the peak distribution after one
+run and both eliminates the OOM churn and stops over-allocating; the
+Ponder-style escalation strategy starts deliberately low and buys even
+lower allocations at the price of retry overhead.
+
+    PYTHONPATH=src python examples/memory_sizing.py
+"""
+from repro.core.monitor import TraceDB
+from repro.core.scheduler import make_scheduler
+from repro.core.sizing import STRATEGIES, SizingConfig, wastage_report
+from repro.workflow.cluster import cluster_555
+from repro.workflow.engine import Engine, EngineConfig
+from repro.workflow.nfcore import WORKFLOWS
+
+N_RUNS = 3
+
+
+def run_strategy(strategy: str) -> None:
+    db = TraceDB()                       # history shared across the stream
+    print(f"\n=== {strategy} ===")
+    for run in range(N_RUNS):
+        specs = cluster_555()
+        eng = Engine(specs, make_scheduler("tarema", specs, seed=run), db,
+                     EngineConfig(seed=run,
+                                  sizing=SizingConfig(strategy=strategy),
+                                  quantile_method="linear"))
+        eng.submit(WORKFLOWS["eager"](), run_id=run, seed=run)
+        res = eng.run()
+        rep = wastage_report(eng.assignment_log)
+        print(f"run {run}: makespan={res['makespan']:8.1f}s  "
+              f"allocated={rep.allocated_gb_s:9.0f} GB-s  "
+              f"wastage={rep.wastage_gb_s:9.0f} GB-s  "
+              f"oom_kills={rep.oom_kills:2d}  "
+              f"retry_overhead={rep.retry_overhead_s:7.1f}s")
+
+
+def main() -> None:
+    for strategy in STRATEGIES:
+        run_strategy(strategy)
+    print("\nStatic requests hide OOM risk and strand memory; percentile"
+          "\nsizing converges after one run of history; escalation trades"
+          "\nretry overhead for the tightest allocations.")
+
+
+if __name__ == "__main__":
+    main()

@@ -29,12 +29,26 @@ import numpy as np
 
 
 class AssignmentRecord(NamedTuple):
-    """One completed task placement, as appended by ``Engine._finish``.
+    """One task placement *attempt*, as appended by ``Engine._finish`` and
+    ``Engine._kill``.
 
     Richer than the seed's ``(task, node, start, end)`` tuple (which is kept
     unchanged for bit-for-bit equivalence with ``engine_ref``): carries the
     tenant tag and enough identity that all fairness accounting is derivable
     from the log alone.
+
+    ``completed`` is False for partial attempts — killed by a node failure,
+    an OOM event (see ``repro.core.sizing``), or speculative-pair
+    resolution.  Those attempts consumed cores and memory for their whole
+    run, so service accounting (Jain-over-core-seconds, group shares) MUST
+    include them; ``Engine._kill`` formerly never logged them, silently
+    undercounting tenants hit by failures.  ``outcome`` refines the flag:
+    ``"done"``, ``"oom"`` (killed, will retry), ``"oom-fail"`` (retries
+    exhausted, instance failed permanently), ``"node-failure"`` (requeued),
+    ``"speculative-loser"``.  ``mem_gb`` is the request the attempt ran
+    under (the *sized* request when ``EngineConfig.sizing`` is on) and
+    ``used_mem_gb`` the sampled peak it reached, so allocated-minus-used
+    wastage integrates directly off the log (``sizing.wastage_report``).
     """
     instance: str
     task: str
@@ -47,6 +61,9 @@ class AssignmentRecord(NamedTuple):
     cores: int
     mem_gb: float
     submit_t: float
+    completed: bool = True
+    used_mem_gb: float = 0.0
+    outcome: str = "done"
 
 
 def jains_index(x) -> float:
@@ -75,6 +92,10 @@ def _factorize(values: list) -> tuple[list, np.ndarray]:
 def core_seconds_by(records: list[AssignmentRecord],
                     node_group: Optional[dict] = None):
     """Aggregate allocated core-seconds per tenant (and per node group).
+
+    Includes partial (killed/requeued/OOM'd) attempts: they held their
+    reservation for their whole interval, and dropping them undercounts
+    exactly the tenants that failures hit.
 
     Returns ``(tenants, groups, matrix)`` where ``matrix[t, g]`` is the
     core-seconds tenant ``t`` consumed on group ``g``.  ``node_group`` maps
@@ -123,9 +144,19 @@ def group_shares(records: list[AssignmentRecord],
 def response_times(records: list[AssignmentRecord]) -> dict:
     """Response time of every workflow run: (tenant, workflow, run_id) ->
     (arrival, completion, response).  Arrival is the run's submit time,
-    completion the last task end."""
+    completion the last task end.  Killed partial attempts
+    (``completed=False``) count toward *service*, not completion, so they
+    are skipped here — and a run containing a permanently-failed task
+    (``outcome="oom-fail"``: its downstream was cancelled) never completed
+    at all, so it is excluded entirely rather than scored as a fast
+    "success" at its last surviving task."""
+    failed = {(r.tenant, r.workflow, r.run_id) for r in records
+              if r.outcome == "oom-fail"}
     out: dict = {}
     for r in records:
+        if not r.completed or (failed and
+                               (r.tenant, r.workflow, r.run_id) in failed):
+            continue
         key = (r.tenant, r.workflow, r.run_id)
         hit = out.get(key)
         if hit is None:

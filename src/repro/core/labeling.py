@@ -50,6 +50,15 @@ class GroupInfo:
 
 def build_group_info(profiles: list[NodeProfile], labels) -> GroupInfo:
     labels = np.asarray(labels)
+    # k-means can return non-contiguous label ids (choose_k keeps a k whose
+    # Lloyd iterations emptied a cluster), and the group machinery below
+    # assumes ids 0..n-1 are all populated — an empty id used to feed
+    # np.mean an empty list (NaN + RuntimeWarning) and corrupt every rank
+    # order downstream.  Compact the ids first: the grouping is identical,
+    # only the (arbitrary) group numbering changes.
+    uniq = np.unique(labels)                    # sorted populated ids
+    if uniq.size != int(labels.max()) + 1:
+        labels = np.searchsorted(uniq, labels)  # vectorized rank remap
     n = int(labels.max()) + 1
     node_group = {p.node: int(g) for p, g in zip(profiles, labels)}
     group_nodes = {g: [p.node for p, l in zip(profiles, labels) if l == g]

@@ -56,6 +56,12 @@ class TraceDB:
         self._agg = defaultdict(lambda: [0, 0.0])
         self._runtime_agg = defaultdict(lambda: [0, 0.0])
         self._runtimes = defaultdict(list)          # kept sorted (insort)
+        # per-(wf, task, feature) usage values, append-only on the hot path;
+        # sorted lazily on first quantile read after a write (usage
+        # quantiles are only consumed by the sizing predictors, so runs
+        # with sizing off must not pay a per-add insort)
+        self._usages = defaultdict(list)
+        self._usages_dirty: set = set()
         self._wf_tasks = defaultdict(set)           # workflow -> task names
         self._usage_cache: dict = {}                # (wf, feature) -> (version, list)
 
@@ -68,6 +74,9 @@ class TraceDB:
                 a = self._agg[(trace.workflow, trace.task_name, f)]
                 a[0] += 1
                 a[1] += float(trace.usage[f])
+                key = (trace.workflow, trace.task_name, f)
+                self._usages[key].append(float(trace.usage[f]))
+                self._usages_dirty.add(key)
         r = self._runtime_agg[(trace.workflow, trace.task_name)]
         r[0] += 1
         r[1] += trace.runtime_s
@@ -90,12 +99,48 @@ class TraceDB:
         c, s = self._runtime_agg[(workflow, task_name)]
         return (s / c) if c else None
 
-    def runtime_quantile(self, workflow: str, task_name: str, q: float) -> Optional[float]:
+    @staticmethod
+    def _quantile(xs: list, q: float, method: str) -> float:
+        """Order statistic over an already-sorted list.
+
+        ``method="seed"`` is the seed implementation's ``int(q*n)`` index —
+        max-biased: for q=0.95 it returns the *maximum* of any history of
+        20 samples or fewer (``int(0.95*n) == n-1`` whenever n <= 20), so
+        early-history speculation fires against the worst run ever seen.
+        ``method="linear"`` is the proper linearly-interpolated order
+        statistic (numpy's default), which the sizing predictors and the
+        ``EngineConfig.quantile_method="linear"`` switch use; the engine
+        default stays ``"seed"`` to pin bit-for-bit equivalence.
+        """
+        if method == "seed":
+            return xs[min(int(q * len(xs)), len(xs) - 1)]
+        if method != "linear":
+            raise ValueError(f"unknown quantile method: {method!r}")
+        pos = q * (len(xs) - 1)
+        lo = int(pos)
+        hi = min(lo + 1, len(xs) - 1)
+        return xs[lo] + (pos - lo) * (xs[hi] - xs[lo])
+
+    def runtime_quantile(self, workflow: str, task_name: str, q: float,
+                         method: str = "seed") -> Optional[float]:
         xs = self._runtimes[(workflow, task_name)]   # maintained sorted
         if not xs:
             return None
-        i = min(int(q * len(xs)), len(xs) - 1)
-        return xs[i]
+        return self._quantile(xs, q, method)
+
+    def usage_quantile(self, workflow: str, task_name: str, feature: str,
+                       q: float, method: str = "linear") -> Optional[float]:
+        """Quantile of a task's historic usage values for one feature
+        (e.g. the peak-memory distribution the sizing predictors consume).
+        Defaults to the corrected linear order statistic."""
+        key = (workflow, task_name, feature)
+        xs = self._usages[key]
+        if not xs:
+            return None
+        if key in self._usages_dirty:       # lazy: timsort on a mostly-
+            xs.sort()                       # sorted list is ~linear
+            self._usages_dirty.discard(key)
+        return self._quantile(xs, q, method)
 
     def all_usages(self, workflow: str, feature: str) -> list[float]:
         """Per-task mean usage over this workflow's historic+active tasks,

@@ -267,6 +267,9 @@ class WeightedTaremaScheduler(TaremaScheduler):
             # WFQ-charge each logical task once: re-placements after a node
             # failure and speculative copies are not new demand, and must
             # not push their (victim) tenant further back in the queue.
+            # OOM retries (EngineConfig.sizing) ARE new demand — the retry
+            # re-runs the full work — so the engine clears the flag when it
+            # requeues an OOM'd attempt and the tenant is charged again.
             # The charged flag lives on the task object so its lifetime is
             # exactly the instance's (no unbounded scheduler-side set).
             if not getattr(task, "_wfq_charged", False) \

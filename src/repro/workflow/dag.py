@@ -41,10 +41,12 @@ class TaskInstance:
     work: dict
     peak_mem_gb: float
     req_cores: int
-    req_mem_gb: float
+    req_mem_gb: float                # live request (rewritten under sizing)
     deps: tuple                      # instance ids
-    # engine state
-    state: str = "pending"           # pending|ready|running|done
+    # engine state.  "killed" covers node-failure victims that were never
+    # re-run (speculative losers), OOM-failed instances that exhausted
+    # their retries, and their cancelled downstream dependents.
+    state: str = "pending"           # pending|ready|running|done|killed
     node: Optional[str] = None
     submit_t: float = 0.0
     start_t: float = 0.0
@@ -52,6 +54,9 @@ class TaskInstance:
     remaining: Optional[dict] = None
     speculative_of: Optional[str] = None
     tenant: str = "default"          # multi-tenant stream tag (see tenancy.py)
+    # online memory sizing (see repro.core.sizing; engine-maintained)
+    attempt: int = 0                 # OOM retries consumed so far
+    base_req_mem_gb: Optional[float] = None   # spec request before sizing
 
 
 def instantiate(spec: WorkflowSpec, run_id: int, seed: int,

@@ -33,7 +33,19 @@ Fault-tolerance features (beyond-paper, used by the FT tests/examples):
     wins), gated on the monitor's historic p95.  A losing pair half that is
     still queued runs redundantly under the seed-pinned default; set
     ``EngineConfig.cancel_stale_speculative`` to drop it instead (found by
-    the property-based invariant suite).
+    the property-based invariant suite);
+  * online memory sizing + OOM-retry semantics (``EngineConfig.sizing``,
+    see ``repro.core.sizing``): queued tasks run under a *predicted*
+    ``req_mem_gb``; an attempt whose sampled peak exceeds the sized request
+    raises an OOM failure partway through its work and is retried under an
+    escalated request (every attempt logged to ``assignment_log``), failing
+    permanently — downstream subtree cancelled — once ``max_retries`` is
+    exhausted.  Default off, bit-for-bit seed-equivalent.
+
+Every task attempt — completed or killed (node failure, OOM, speculative
+loser) — is appended to ``assignment_log``; killed attempts carry
+``completed=False`` so fairness/wastage accounting sees the service that
+failures consumed (the seed logged only completions).
 
 Known-broken seed paths fixed here (unreachable by the equivalence suite):
 the idle-with-pending-failure branch indexed the failure *node* instead of
@@ -54,7 +66,9 @@ import numpy as np
 from repro.core.fairness import AssignmentRecord
 from repro.core.monitor import TaskTrace, TraceDB
 from repro.core.profiler import NodeSpec
-from repro.workflow.dag import TaskInstance, WorkflowSpec, instantiate
+from repro.core.sizing import SizingConfig, make_sizer
+from repro.workflow.dag import (TaskInstance, WorkflowSpec, instantiate,
+                                stable_seed)
 
 # Contention defaults: calibrated against the paper's Fig. 4/5 gaps
 # (see EXPERIMENTS.md §Calibration); overridable per EngineConfig.
@@ -163,6 +177,16 @@ class EngineConfig:
     # completion — but its semantics are pinned bit-for-bit by the
     # equivalence tests, so the fix is opt-in (default: seed behaviour).
     cancel_stale_speculative: bool = False
+    # Order statistic behind the speculation p95: "seed" pins the seed's
+    # max-biased int(q*n) index for bit-for-bit equivalence; "linear" is
+    # the corrected interpolated quantile (see TraceDB._quantile) — on
+    # histories of <= 20 samples the seed method returns the maximum, so
+    # early-history speculation over-fires against the worst run ever seen.
+    quantile_method: str = "seed"
+    # Online memory sizing + OOM-retry semantics (repro.core.sizing).
+    # None (default) reserves every instance's static spec request and
+    # never raises OOM events — bit-for-bit seed-equivalent.
+    sizing: Optional[SizingConfig] = None
     seed: int = 0
     usage_noise: float = 0.03
     mem_beta: float = MEM_SHARE_BETA
@@ -200,6 +224,12 @@ class Engine:
         self._failures: list[tuple] = []         # (time, node)
         self._spec_copies: dict[str, str] = {}   # primary id -> copy id
         self._uid = itertools.count()
+        # online memory sizing (None == seed semantics, no OOM events)
+        self._sizer = None if self.cfg.sizing is None \
+            else make_sizer(self.cfg.sizing)
+        self._refresh_mem_cap()
+        self.sizing_stats = {"oom_events": 0, "oom_failures": 0,
+                             "retry_overhead_s": 0.0}
         # append-only running-task slots (SoA); slot order == start order ==
         # `running`-dict insertion order, which the argmin tie-break relies on
         self._slot_cap = 256
@@ -291,6 +321,20 @@ class Engine:
             orig = self.all_tasks.get(task.speculative_of)
             if orig is not None and orig.node:
                 feas[orig.node] = False
+        else:
+            # ...and symmetrically: a primary that re-enters the queue while
+            # its copy runs (requeued by a node failure) must not land on the
+            # copy's node — the seed only blocked the copy->original
+            # direction, so after a requeue both halves could share a node,
+            # defeating the point of speculation.  Only a *running* sibling
+            # pins a node (a finished copy's node stays set but no longer
+            # excludes: the seed-pinned redundant-loser path must still be
+            # placeable anywhere).
+            cid = self._spec_copies.get(task.instance)
+            if cid is not None:
+                copy = self.all_tasks.get(cid)
+                if copy is not None and copy.state == "running" and copy.node:
+                    feas[copy.node] = False
         return feas
 
     def _alloc_slot(self) -> int:
@@ -341,9 +385,24 @@ class Engine:
         task.node = node_name
         task.start_t = self.t
         task.remaining = dict(task.work)   # informational; SoA is the truth
+        # OOM dooming (sizing only): an attempt whose sampled peak exceeds
+        # its sized request fails at a deterministic per-instance fraction
+        # of its work — the slot simply carries the truncated remaining
+        # work, so the vectorized next-finish machinery is untouched and
+        # the "finish" event is reinterpreted as the OOM kill.
+        frac = 1.0
+        if self._sizer is not None and \
+                task.req_mem_gb < task.peak_mem_gb - 1e-9:
+            lo, hi = self.cfg.sizing.oom_progress
+            u = np.random.default_rng(
+                (stable_seed(task.instance), 0xA110C)).random()
+            frac = lo + (hi - lo) * u
+            task._oom_doomed = True
+        else:
+            task._oom_doomed = False
         s = self._alloc_slot()
         for j, f in enumerate(_REM_FEATURES):
-            self._rem[s, j] = task.work[f]
+            self._rem[s, j] = task.work[f] * frac
         self._slot_node[s] = i
         self._slot_active[s] = True
         self._slot_tasks[s] = task
@@ -381,7 +440,8 @@ class Engine:
         self.assignment_log.append(AssignmentRecord(
             task.instance, task.name, task.workflow, task.run_id, task.tenant,
             task.node, task.start_t, task.end_t, task.req_cores,
-            task.req_mem_gb, task.submit_t))
+            task.req_mem_gb, task.submit_t, completed=True,
+            used_mem_gb=task.peak_mem_gb, outcome="done"))
         self._unfinished -= 1
         if task.end_t > self._max_end:
             self._max_end = task.end_t
@@ -399,7 +459,8 @@ class Engine:
                                   tenant=task.tenant))
         self._on_done(task.instance)
 
-    def _kill(self, task: TaskInstance, requeue: bool):
+    def _kill(self, task: TaskInstance, requeue: bool,
+              reason: Optional[str] = None):
         na = self._na
         i = na.index[task.node]
         na.free_cores[i] += task.req_cores
@@ -408,6 +469,17 @@ class Engine:
         self.nodes[task.node].running.discard(task.instance)
         self.running.pop(task.instance, None)
         self._release_slot(task.instance)
+        # partial attempts consume cores/memory for their whole run: log
+        # them (completed=False) so fairness/wastage accounting sees the
+        # service — the seed silently dropped every killed attempt,
+        # undercounting exactly the tenants that failures hit
+        self.assignment_log.append(AssignmentRecord(
+            task.instance, task.name, task.workflow, task.run_id, task.tenant,
+            task.node, task.start_t, self.t, task.req_cores, task.req_mem_gb,
+            task.submit_t, completed=False,
+            used_mem_gb=min(task.peak_mem_gb, task.req_mem_gb),
+            outcome=reason or ("node-failure" if requeue
+                               else "speculative-loser")))
         if requeue:
             task.state = "ready"
             task.node = None
@@ -417,6 +489,88 @@ class Engine:
             task.state = "killed"
             self._unfinished -= 1
 
+    # ------------------------------------------------- online memory sizing
+    def _refresh_mem_cap(self):
+        """Largest *enabled* node's memory — the ceiling for sized/escalated
+        requests.  Clamping to a disabled (or failed) node's capacity would
+        let escalation settle on a request no live node can host: the task
+        would sit unplaceable forever instead of oom-failing.  Recomputed on
+        every node disable (and at run start for pre-disabled clusters)."""
+        na = self._na
+        live = na.mem_gb[~na.disabled]
+        self._mem_cap = float(live.max()) if live.size else 0.0
+
+    def _size_request(self, task: TaskInstance) -> float:
+        """Predicted attempt-0 request, clamped to [min_gb, largest node]."""
+        if task.base_req_mem_gb is None:
+            task.base_req_mem_gb = task.req_mem_gb
+        pred = self._sizer.predict(self.db, task.workflow, task.name,
+                                   task.base_req_mem_gb)
+        return min(self._mem_cap, pred)
+
+    def _cancel_downstream(self, instance: str):
+        """A permanently-failed instance can never satisfy its dependents:
+        transitively mark every still-pending dependent killed so the run
+        terminates instead of deadlocking on an unreachable counter."""
+        stack = [instance]
+        while stack:
+            for d in self._dependents.get(stack.pop(), ()):
+                t = self.all_tasks[d]
+                if t.state == "pending":
+                    t.state = "killed"
+                    self._unfinished -= 1
+                    stack.append(d)
+
+    def _oom(self, task: TaskInstance):
+        """Handle an attempt whose sampled peak exceeded its sized request.
+
+        The attempt is killed (releasing its reservation, logging the
+        partial attempt); a primary is requeued under an escalated request
+        until ``max_retries`` is exhausted, after which it fails permanently
+        and its downstream subtree is cancelled.  A speculative copy is
+        simply dropped — the primary it was racing is still in flight.
+        """
+        self.sizing_stats["oom_events"] += 1
+        self.sizing_stats["retry_overhead_s"] += self.t - task.start_t
+        if task.speculative_of:
+            self._kill(task, requeue=False, reason="oom")
+            if self._spec_copies.get(task.speculative_of) == task.instance:
+                del self._spec_copies[task.speculative_of]
+            return
+        failed = task.req_mem_gb
+        self._sizer.observe_oom(task.workflow, task.name, failed)
+        task.attempt += 1
+        nxt = min(self._mem_cap,
+                  self._sizer.escalate(self.db, task.workflow, task.name,
+                                       failed))
+        if task.attempt > self.cfg.sizing.max_retries or nxt <= failed + 1e-9:
+            # retries exhausted (or the escalation is already pinned at the
+            # largest enabled node's memory): permanent failure
+            self.sizing_stats["oom_failures"] += 1
+            self._kill(task, requeue=False, reason="oom-fail")
+            task.node = None          # dead primary must not pin a node
+            self._cancel_downstream(task.instance)
+            # resolve any speculative pair: the copy was racing work that is
+            # now abandoned — left alone it would stay pinned away from the
+            # dead primary's node (possibly unplaceable forever) or complete
+            # into a subtree that was just cancelled
+            cid = self._spec_copies.pop(task.instance, None)
+            if cid is not None:
+                copy = self.all_tasks.get(cid)
+                if copy is not None:
+                    if copy.instance in self.running:
+                        self._kill(copy, requeue=False,
+                                   reason="speculative-loser")
+                    else:
+                        self._drop_queued(cid)
+        else:
+            self._kill(task, requeue=True, reason="oom")
+            task.req_mem_gb = nxt            # escalated, pinned for the retry
+            # the retry re-runs the full work: it IS new demand, so let the
+            # WFQ scheduler charge the tenant again (unlike node-failure
+            # requeues, which re-place already-charged work)
+            task._wfq_charged = False
+
     def _prepare(self):
         """Build the dependency-counter state from the submitted task set.
 
@@ -424,6 +578,7 @@ class Engine:
         contents of `all_tasks` so instance-id overwrites between multiple
         `submit()` calls resolve exactly as the seed's per-event rescan did.
         """
+        self._refresh_mem_cap()       # nodes may have been disabled directly
         self._deps_left = {}
         self._dependents = defaultdict(list)
         self._ready_batch = []
@@ -462,6 +617,17 @@ class Engine:
                 self.queue.append(t)
 
     def _schedule(self):
+        if self._sizer is not None:
+            # re-size attempt-0 requests every pass (predictions sharpen as
+            # the monitor ingests traces; memoized per history epoch so a
+            # stable queue costs dict hits).  Schedulers then *place against
+            # the predicted request*: _feasible and SimNode.load() read
+            # req_mem_gb, so Tarema/weighted-Tarema group picks and
+            # least-loaded tie-breaks all see the sized value.  Escalated
+            # retry requests (attempt > 0) are pinned in _oom.
+            for task in self.queue:
+                if task.attempt == 0:
+                    task.req_mem_gb = self._size_request(task)
         self.queue = self.scheduler.order(self.queue, self.db)
         still = []
         for task in self.queue:
@@ -479,7 +645,8 @@ class Engine:
         for task in list(self.running.values()):
             if task.speculative_of or task.instance in self._spec_copies:
                 continue
-            p95 = self.db.runtime_quantile(task.workflow, task.name, 0.95)
+            p95 = self.db.runtime_quantile(task.workflow, task.name, 0.95,
+                                           method=self.cfg.quantile_method)
             if p95 and (self.t - task.start_t) > self.cfg.speculation_factor * p95:
                 copy = dataclasses.replace(
                     task, instance=f"{task.instance}~spec{next(self._uid)}",
@@ -512,6 +679,7 @@ class Engine:
     def _disable_node(self, name: str):
         node = self.nodes[name]
         node.disabled = True
+        self._refresh_mem_cap()
         for tid in list(node.running):
             self._kill(self.running[tid], requeue=True)
 
@@ -555,7 +723,9 @@ class Engine:
                 for t_ in self.running.values():
                     if t_.speculative_of or t_.instance in self._spec_copies:
                         continue
-                    p95 = self.db.runtime_quantile(t_.workflow, t_.name, 0.95)
+                    p95 = self.db.runtime_quantile(
+                        t_.workflow, t_.name, 0.95,
+                        method=self.cfg.quantile_method)
                     if p95:
                         wake = (t_.start_t + self.cfg.speculation_factor * p95
                                 + 1e-6) - self.t
@@ -574,6 +744,14 @@ class Engine:
             if finishing is None:      # speculation wake-up, nothing finished
                 continue
             task = finishing
+            if getattr(task, "_oom_doomed", False):
+                # the "finish" of an under-sized attempt is its OOM point:
+                # kill + escalate + retry instead of completing
+                self._oom(task)
+                self._maybe_compact()
+                if self.t > max_t:
+                    raise RuntimeError("simulation exceeded max_t")
+                continue
             self._finish(task)
             # speculative pair resolution: first finisher wins.  The loser
             # may be running (seed semantics: kill it) or still *queued* —

@@ -18,6 +18,7 @@ from _hyp import given, settings, st
 from repro.core.monitor import TraceDB
 from repro.core.profiler import NodeSpec
 from repro.core.scheduler import TENANT_SCHEDULERS, make_scheduler
+from repro.core.sizing import STRATEGIES, SizingConfig
 from repro.workflow.dag import AbstractTask, WorkflowSpec
 from repro.workflow.engine import Engine, EngineConfig
 
@@ -51,8 +52,8 @@ class CheckedEngine(Engine):
         super()._finish(task, record)
         self._assert_capacity()
 
-    def _kill(self, task, requeue):
-        super()._kill(task, requeue)
+    def _kill(self, task, requeue, reason=None):
+        super()._kill(task, requeue, reason)
         self._assert_capacity()
 
 
@@ -148,16 +149,105 @@ def test_engine_invariants(seed):
         assert abs(node.free_mem - node.spec.mem_gb) < 1e-6
         assert not node.running
 
-    # every trace is well-formed and inside the makespan
-    assert len(res["assignments"]) == len(eng.assignment_log)
+    # every trace is well-formed and inside the makespan; the seed-shaped
+    # `assignments` list corresponds 1:1 to the *completed* records, while
+    # killed partial attempts (node failure, speculative losers) ride along
+    # flagged completed=False
+    completed = [r for r in eng.assignment_log if r.completed]
+    assert len(res["assignments"]) == len(completed)
+    assert all(r.outcome == "done" for r in completed)
     for rec in eng.assignment_log:
-        assert rec.start < rec.end <= makespan + 1e-9, rec
+        if rec.completed:
+            assert rec.start < rec.end <= makespan + 1e-9, rec
+        else:
+            assert rec.start <= rec.end <= makespan + 1e-9, rec
+            assert rec.outcome in ("node-failure", "speculative-loser",
+                                   "oom", "oom-fail"), rec
         assert rec.end >= rec.submit_t
         assert rec.node in eng.nodes
         assert rec.tenant in ("ta", "tb")
 
     # tenant tags survive into the monitor's traces
     assert {t.tenant for t in eng.db.records} <= {"ta", "tb"}
+
+
+@given(st.integers(0, 10_000_000))
+@settings(max_examples=12, deadline=None)
+def test_engine_invariants_sized(seed):
+    """Memory-sizing invariants under random DAGs x clusters x strategies.
+
+    CheckedEngine asserts on every start/finish/kill transition that node
+    reservations stay conserved — which covers every OOM kill/retry cycle.
+    Post-hoc: per instance, attempt requests escalate strictly
+    monotonically; every OOM'd instance either eventually completes or
+    exhausts ``max_retries`` (its downstream then cancelled, never
+    deadlocked); OOM overhead is visible in the stats, never dropped.
+    """
+    rng = np.random.default_rng(seed)
+    specs = random_cluster(rng)
+    scfg = SizingConfig(strategy=STRATEGIES[seed % len(STRATEGIES)],
+                        max_retries=int(rng.integers(1, 5)),
+                        escalation_factor=float(rng.uniform(1.3, 2.5)))
+    cfg = EngineConfig(seed=seed, sizing=scfg, quantile_method="linear",
+                       speculation=bool(rng.integers(0, 2)),
+                       speculation_factor=1.5,
+                       cancel_stale_speculative=True)
+    sched = TENANT_SCHEDULERS[seed % len(TENANT_SCHEDULERS)]
+    disabled = None
+    if len(specs) > 3 and rng.random() < 0.3:   # sizing x disabled nodes
+        disabled = {specs[int(rng.integers(0, len(specs)))].name}
+    eng = CheckedEngine(specs, make_scheduler(sched, specs, seed=seed),
+                        TraceDB(), cfg, disabled_nodes=disabled)
+    eng.submit(random_workflow(rng, "wfa"), run_id=0, seed=seed,
+               tenant="ta", prefix="a")
+    # second run of the same stream so predictors see history mid-stream
+    eng.submit(random_workflow(rng, "wfb"), run_id=0, seed=seed + 1,
+               at=float(rng.uniform(0.0, 40.0)), tenant="tb", prefix="b")
+    res = eng.run()
+
+    # resources fully restored across every OOM kill/retry cycle
+    for node in eng.nodes.values():
+        assert node.free_cores == node.spec.cores
+        assert abs(node.free_mem - node.spec.mem_gb) < 1e-6
+        assert not node.running
+
+    by_instance: dict = {}
+    for rec in eng.assignment_log:
+        by_instance.setdefault(rec.instance, []).append(rec)
+    n_oom = 0
+    for iid, recs in by_instance.items():
+        recs.sort(key=lambda r: r.start)
+        oom = [r for r in recs if r.outcome in ("oom", "oom-fail")]
+        n_oom += len(oom)
+        # escalated requests monotonically increase attempt over attempt
+        reqs = [r.mem_gb for r in recs if r.outcome in ("oom", "oom-fail",
+                                                        "done")]
+        assert all(b > a for a, b in zip(reqs, reqs[1:])), (iid, reqs)
+        task = eng.all_tasks[iid]
+        if not oom:
+            continue
+        # every OOM'd instance completes or exhausts max_retries
+        if any(r.outcome == "oom-fail" for r in recs):
+            assert task.state == "killed"
+            # failed because retries ran out or escalation hit the largest
+            # node's memory — never for any other (silent) reason
+            assert task.attempt > scfg.max_retries or \
+                recs[-1].mem_gb >= max(s.mem_gb for s in specs) - 1e-9, \
+                (iid, recs)
+        elif task.speculative_of:
+            assert task.state in ("done", "killed")
+        else:
+            assert iid in eng.done, f"OOM'd {iid} neither done nor failed"
+            assert task.attempt <= scfg.max_retries
+    # OOM overhead is reported, never silently dropped
+    assert eng.sizing_stats["oom_events"] == n_oom
+    if n_oom:
+        assert eng.sizing_stats["retry_overhead_s"] > 0.0
+    # cancelled dependents of permanent failures are marked killed, and the
+    # run terminated cleanly (no deadlock): every task reached a final state
+    for t in eng.all_tasks.values():
+        assert t.state in ("done", "killed"), (t.instance, t.state)
+    assert res["makespan"] >= 0.0
 
 
 @given(st.integers(0, 10_000_000))

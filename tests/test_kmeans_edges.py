@@ -88,6 +88,52 @@ def test_choose_k_tiny_cluster_feeds_labeling():
         assert ps[0] == 0.0 and ps[-1] == 1.0
 
 
+def test_build_group_info_non_contiguous_labels():
+    """Regression: k-means can emit non-contiguous label ids (a Lloyd
+    iteration empties a cluster) and build_group_info used to np.mean an
+    empty list per feature — NaN + RuntimeWarning, then a corrupt rank
+    order.  Ids must be compacted and ranks stay NaN-free."""
+    import warnings
+
+    profiles = profile_cluster_synthetic(cluster_555()[:4], seed=0)
+    labels = np.array([0, 2, 2, 5])          # ids 1, 3, 4 empty
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")       # any RuntimeWarning -> failure
+        info = labeling.build_group_info(profiles, labels)
+    assert info.n_groups == 3                # compacted to 0..2
+    assert sorted(info.group_nodes) == [0, 1, 2]
+    assert sorted(len(v) for v in info.group_nodes.values()) == [1, 1, 2]
+    assert set(info.node_group.values()) == {0, 1, 2}
+    for f in ("cpu", "mem", "io"):
+        ranks = sorted(info.node_labels[g][f] for g in range(3))
+        assert ranks == [1, 2, 3]            # every rank assigned, no NaN
+        assert sorted(info.group_rank_order[f]) == [0, 1, 2]
+        ps = labeling.percentiles(info, f)
+        assert ps[0] == 0.0 and ps[-1] == 1.0
+        assert all(np.isfinite(ps))
+    # identical grouping expressed contiguously gives the same structure
+    info_c = labeling.build_group_info(profiles, np.array([0, 1, 1, 2]))
+    assert info_c.node_group == info.node_group
+    assert info_c.node_labels == info.node_labels
+
+
+def test_non_contiguous_labels_feed_task_labeling():
+    """The compacted grouping must flow through the full phase-2 task
+    labeling path (usage intervals + label_from_bounds) unchanged."""
+    from repro.core.monitor import TaskTrace, TraceDB
+
+    profiles = profile_cluster_synthetic(cluster_555()[:4], seed=0)
+    info = labeling.build_group_info(profiles, np.array([0, 3, 3, 1]))
+    db = TraceDB()
+    for i, mem in enumerate([1.0, 2.0, 8.0]):
+        db.add(TaskTrace("wf", f"t{i}", f"t{i}[0]", 0, "a-n1-0", 10.0,
+                         {"cpu": 40.0 * (i + 1), "mem": mem, "io": 5.0}))
+    for i in range(3):
+        lab = labeling.label_task(db, info, "wf", f"t{i}")
+        assert lab is not None
+        assert all(1 <= lab[f] <= info.n_groups for f in lab)
+
+
 def test_choose_k_three_profiles_sweeps_k2_only():
     """n == 3 bounds the sweep at k == 2 (n-1) and still returns a valid
     grouping."""

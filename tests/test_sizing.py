@@ -1,0 +1,340 @@
+"""Online memory sizing: predictors, OOM-retry engine semantics, wastage
+accounting, and the corrected order statistic (see repro.core.sizing)."""
+import numpy as np
+import pytest
+
+from repro.core.fairness import AssignmentRecord
+from repro.core.monitor import TaskTrace, TraceDB
+from repro.core.scheduler import SCHEDULERS, make_scheduler
+from repro.core.sizing import (EscalationSizer, PercentileSizer, SizingConfig,
+                               StaticSizer, make_sizer, wastage_report)
+from repro.workflow.cluster import cluster_555
+from repro.workflow.dag import AbstractTask, WorkflowSpec
+from repro.workflow.engine import Engine, EngineConfig
+
+
+def _db_with_mem(values, wf="wf", task="t"):
+    db = TraceDB()
+    for i, v in enumerate(values):
+        db.add(TaskTrace(wf, task, f"{task}[{i}]", 0, "n0", 10.0 + i,
+                         {"cpu": 50.0, "mem": float(v), "io": 1.0}))
+    return db
+
+
+# ------------------------------------------------------------- order statistic
+def test_runtime_quantile_seed_method_is_max_biased():
+    """The seed's int(q*n) index returns the maximum for q=0.95 on any
+    history of <= 20 samples — the corrected linear statistic does not."""
+    db = TraceDB()
+    for i in range(5):
+        db.add(TaskTrace("wf", "t", f"t[{i}]", 0, "n0", float(10 + i), {}))
+    assert db.runtime_quantile("wf", "t", 0.95) == 14.0          # == max
+    assert db.runtime_quantile("wf", "t", 0.95, method="seed") == 14.0
+    lin = db.runtime_quantile("wf", "t", 0.95, method="linear")
+    assert 13.0 < lin < 14.0
+    assert lin == pytest.approx(13.8)
+    with pytest.raises(ValueError):
+        db.runtime_quantile("wf", "t", 0.95, method="nope")
+
+
+def test_usage_quantile_linear_default():
+    db = _db_with_mem([1.0, 2.0, 3.0, 4.0])
+    assert db.usage_quantile("wf", "t", "mem", 0.5) == pytest.approx(2.5)
+    assert db.usage_quantile("wf", "t", "mem", 1.0) == 4.0
+    assert db.usage_quantile("wf", "t", "mem", 0.0) == 1.0
+    assert db.usage_quantile("wf", "nohist", "mem", 0.5) is None
+
+
+def test_engine_quantile_method_switch_changes_speculation_threshold():
+    """EngineConfig.quantile_method is plumbed into the speculation p95."""
+    db = TraceDB()
+    for i in range(10):
+        db.add(TaskTrace("wf", "t", f"t[{i}]", 0, "n0", float(100 + i), {}))
+    seed_p95 = db.runtime_quantile("wf", "t", 0.95, method="seed")
+    lin_p95 = db.runtime_quantile("wf", "t", 0.95, method="linear")
+    assert seed_p95 == 109.0 and lin_p95 < seed_p95
+
+
+# ------------------------------------------------------------------ predictors
+def test_static_sizer_returns_base():
+    s = make_sizer(SizingConfig(strategy="static"))
+    assert isinstance(s, StaticSizer)
+    assert s.predict(_db_with_mem([1.0]), "wf", "t", 5.0) == 5.0
+
+
+def test_percentile_sizer_history_and_fallback():
+    cfg = SizingConfig(strategy="percentile", quantile=0.95, safety=0.10)
+    s = make_sizer(cfg)
+    assert isinstance(s, PercentileSizer)
+    db = _db_with_mem(np.linspace(1.0, 2.0, 21))        # q95(linear) == 1.95
+    pred = s.predict(db, "wf", "t", 5.0)
+    assert pred == pytest.approx(1.95 * 1.10)
+    # no history -> static fallback; prediction floors at min_gb
+    assert s.predict(db, "wf", "unknown", 5.0) == 5.0
+    tiny = make_sizer(SizingConfig(strategy="percentile", min_gb=0.5))
+    assert tiny.predict(_db_with_mem([0.01]), "wf", "t", 5.0) == 0.5
+
+
+def test_percentile_sizer_memoizes_per_epoch():
+    cfg = SizingConfig(strategy="percentile")
+    s = make_sizer(cfg)
+    db = _db_with_mem([2.0, 3.0])
+    a = s.predict(db, "wf", "t", 5.0)
+    assert s.predict(db, "wf", "t", 5.0) == a
+    assert len(s._cache) == 1
+    db.add(TaskTrace("wf", "t", "t[9]", 0, "n0", 1.0, {"mem": 30.0}))
+    assert s.predict(db, "wf", "t", 5.0) > a          # new epoch, new answer
+
+
+def test_escalation_sizer_starts_low_learns_floors():
+    cfg = SizingConfig(strategy="escalation", start_fraction=0.5,
+                       escalation_factor=2.0, safety=0.0)
+    s = make_sizer(cfg)
+    db = TraceDB()
+    assert isinstance(s, EscalationSizer)
+    # no history: deliberate under-provision at start_fraction * base
+    assert s.predict(db, "wf", "t", 5.0) == 2.5
+    assert s.escalate(db, "wf", "t", 2.5) == 5.0
+    # observed OOM at 2.5 -> future instances start above the failed request
+    s.observe_oom("wf", "t", 2.5)
+    assert s.predict(db, "wf", "t", 5.0) == 5.0
+
+
+# ------------------------------------------------------- engine OOM mechanics
+def _wf_fixed_peak(peak, n=3, name="wfoom"):
+    return WorkflowSpec(name, [
+        AbstractTask("big", n, {"cpu": 800.0, "mem": 200.0, "io": 10.0},
+                     peak_mem_gb=peak),
+        AbstractTask("post", 1, {"cpu": 200.0, "mem": 50.0, "io": 5.0},
+                     peak_mem_gb=0.5, deps=("big",)),
+    ])
+
+
+def _run_sized(scfg, wf, db=None, sched="fair", seed=0):
+    specs = cluster_555()
+    db = db if db is not None else TraceDB()
+    eng = Engine(specs, make_scheduler(sched, specs, seed=seed), db,
+                 EngineConfig(seed=seed, sizing=scfg,
+                              quantile_method="linear"))
+    eng.submit(wf, run_id=0, seed=seed)
+    res = eng.run()
+    return eng, res
+
+
+def test_oom_retry_escalates_and_completes():
+    """Under-provisioned attempts OOM, escalate, and finish; every attempt
+    is logged and the overhead is reported."""
+    scfg = SizingConfig(strategy="escalation", start_fraction=0.2,
+                        escalation_factor=2.0, max_retries=5)
+    eng, res = _run_sized(scfg, _wf_fixed_peak(3.5))
+    assert all(t.state == "done" for t in eng.all_tasks.values())
+    ooms = [r for r in eng.assignment_log if r.outcome == "oom"]
+    assert ooms, "expected OOM retries from the deliberate under-provision"
+    assert eng.sizing_stats["oom_events"] == len(ooms)
+    assert eng.sizing_stats["retry_overhead_s"] == pytest.approx(
+        sum(r.end - r.start for r in ooms))
+    # attempts escalate strictly; the completing attempt covers the peak
+    for t in eng.all_tasks.values():
+        recs = sorted((r for r in eng.assignment_log
+                       if r.instance == t.instance), key=lambda r: r.start)
+        reqs = [r.mem_gb for r in recs]
+        assert all(b > a for a, b in zip(reqs, reqs[1:]))
+        assert recs[-1].completed and recs[-1].mem_gb >= t.peak_mem_gb - 1e-9
+
+
+def test_oom_exhaustion_fails_and_cancels_downstream():
+    """max_retries=0 with a too-small non-escalatable request: the instance
+    fails permanently and its dependents are cancelled, not deadlocked."""
+    scfg = SizingConfig(strategy="escalation", start_fraction=0.2,
+                        escalation_factor=2.0, max_retries=0)
+    eng, res = _run_sized(scfg, _wf_fixed_peak(3.5))
+    fails = [r for r in eng.assignment_log if r.outcome == "oom-fail"]
+    assert fails, "expected permanent OOM failures at max_retries=0"
+    assert eng.sizing_stats["oom_failures"] == len(fails)
+    bigs = [t for t in eng.all_tasks.values() if t.name == "big"]
+    post = next(t for t in eng.all_tasks.values() if t.name == "post")
+    assert all(t.state == "killed" for t in bigs)
+    assert post.state == "killed" and post.instance not in eng.done
+
+
+def test_sized_requests_visible_to_scheduler_placement():
+    """Schedulers place against the predicted request: with history, the
+    reserved memory at placement equals the prediction, not the static
+    5 GB — and total reserved memory never exceeds a node's capacity."""
+    scfg = SizingConfig(strategy="percentile", quantile=0.95, safety=0.10)
+    db = TraceDB()
+    _run_sized(SizingConfig(strategy="static"), _wf_fixed_peak(2.0), db=db)
+    eng, _ = _run_sized(scfg, _wf_fixed_peak(2.0), db=db)
+    done = [r for r in eng.assignment_log
+            if r.completed and r.task == "big"]
+    assert done and all(r.mem_gb < 3.0 for r in done), \
+        "sized requests should be ~2.2 GB, not the static 5 GB"
+
+
+def test_sizing_off_is_bitforbit_noop():
+    """sizing=None leaves makespan, assignments, and log identical to a
+    config-default run (the equivalence suite pins vs engine_ref; this
+    pins the default EngineConfig path against an explicit None)."""
+    eng_a, res_a = _run_sized(None, _wf_fixed_peak(3.5))
+    specs = cluster_555()
+    eng_b = Engine(specs, make_scheduler("fair", specs, seed=0), TraceDB(),
+                   EngineConfig(seed=0))
+    eng_b.submit(_wf_fixed_peak(3.5), run_id=0, seed=0)
+    res_b = eng_b.run()
+    assert res_a["makespan"] == res_b["makespan"]
+    assert res_a["assignments"] == res_b["assignments"]
+    assert not any(r.outcome != "done" for r in eng_b.assignment_log)
+
+
+@pytest.mark.parametrize("sched", SCHEDULERS)
+def test_all_schedulers_complete_under_sizing(sched):
+    scfg = SizingConfig(strategy="escalation", start_fraction=0.3,
+                        max_retries=4)
+    eng, res = _run_sized(scfg, _wf_fixed_peak(3.0), sched=sched)
+    assert all(t.state == "done" for t in eng.all_tasks.values())
+    assert res["makespan"] > 0
+
+
+# --------------------------------------------------------- wastage accounting
+def _rec(instance, start, end, mem, used, completed=True, outcome="done",
+         tenant="a"):
+    return AssignmentRecord(instance, "t", "wf", 0, tenant, "n0", start, end,
+                            2, mem, 0.0, completed, used, outcome)
+
+
+def test_wastage_report_hand_computed():
+    recs = [
+        _rec("t[0]", 0.0, 10.0, 5.0, 2.0),                    # waste 30 GB-s
+        _rec("t[1]", 0.0, 4.0, 2.0, 2.0, completed=False,
+             outcome="oom"),                                  # waste 0, 4 s
+        _rec("t[1]", 5.0, 15.0, 4.0, 3.0, tenant="b"),        # waste 10 GB-s
+    ]
+    rep = wastage_report(recs)
+    assert rep.n_records == 3 and rep.n_completed == 2
+    assert rep.allocated_gb_s == pytest.approx(50 + 8 + 40)
+    assert rep.used_gb_s == pytest.approx(20 + 8 + 30)
+    assert rep.wastage_gb_s == pytest.approx(30 + 0 + 10)
+    assert rep.oom_kills == 1 and rep.oom_failures == 0
+    assert rep.retry_overhead_s == pytest.approx(4.0)
+    assert rep.per_tenant["a"]["wastage_gb_s"] == pytest.approx(30.0)
+    assert rep.per_tenant["b"]["wastage_gb_s"] == pytest.approx(10.0)
+    empty = wastage_report([])
+    assert empty.n_records == 0 and empty.wastage_gb_s == 0.0
+
+
+def test_percentile_sizing_cuts_wastage_on_history():
+    """The headline claim in miniature: with one run of history, percentile
+    sizing allocates less GB-s than static for the same completed work."""
+    db_s, db_p = TraceDB(), TraceDB()
+    wf = _wf_fixed_peak(2.0, n=6)
+    _run_sized(SizingConfig(strategy="static"), wf, db=db_s)
+    eng_s, _ = _run_sized(SizingConfig(strategy="static"), wf, db=db_s,
+                          seed=1)
+    _run_sized(SizingConfig(strategy="static"), wf, db=db_p)
+    eng_p, _ = _run_sized(SizingConfig(strategy="percentile"), wf, db=db_p,
+                          seed=1)
+    rep_s = wastage_report(eng_s.assignment_log)
+    rep_p = wastage_report(eng_p.assignment_log)
+    assert rep_p.n_completed == rep_s.n_completed
+    assert rep_p.allocated_gb_s < rep_s.allocated_gb_s
+    assert rep_p.wastage_gb_s < rep_s.wastage_gb_s
+
+
+def test_escalation_caps_at_largest_enabled_node():
+    """Regression: the escalation ceiling was the largest node's memory
+    *including disabled nodes* — a sized request could settle on a
+    capacity no live node has and sit unplaceable forever (RuntimeError)
+    instead of oom-failing."""
+    from repro.core.profiler import NodeSpec
+    specs = [NodeSpec("small-0", "s", 8, 8.0, cpu_speed=400.0,
+                      mem_bw=15000.0),
+             NodeSpec("small-1", "s", 8, 8.0, cpu_speed=400.0,
+                      mem_bw=15000.0),
+             NodeSpec("big-0", "b", 8, 64.0, cpu_speed=400.0,
+                      mem_bw=15000.0)]
+    wf = WorkflowSpec("caps", [
+        AbstractTask("huge", 1, {"cpu": 300.0, "mem": 50.0, "io": 5.0},
+                     peak_mem_gb=20.0),         # fits only the disabled node
+        AbstractTask("tail", 1, {"cpu": 100.0, "mem": 20.0, "io": 2.0},
+                     peak_mem_gb=0.5, deps=("huge",)),
+    ])
+    eng = Engine(specs, make_scheduler("fair", specs, seed=0), TraceDB(),
+                 EngineConfig(seed=0, quantile_method="linear",
+                              sizing=SizingConfig(strategy="escalation",
+                                                  start_fraction=0.5,
+                                                  max_retries=8)),
+                 disabled_nodes={"big-0"})
+    eng.submit(wf, run_id=0, seed=0)
+    res = eng.run()
+    huge = next(t for t in eng.all_tasks.values() if t.name == "huge")
+    assert huge.state == "killed"               # oom-failed, not deadlocked
+    assert any(r.outcome == "oom-fail" and r.mem_gb <= 8.0
+               for r in eng.assignment_log)
+    assert res["makespan"] >= 0.0
+
+
+def test_permanent_oom_failure_resolves_speculative_pair():
+    """Regression: a primary that exhausted its OOM retries kept its
+    `_spec_copies` entry and node pin, orphaning the speculative copy —
+    a still-queued copy stayed excluded from the dead primary's node
+    forever and the run deadlocked (RuntimeError: tasks stuck)."""
+    specs = cluster_555()[:1]                   # one node: the copy can
+    db = TraceDB()                              # never place while the
+    wf = WorkflowSpec("spec", [                 # primary pins it
+        AbstractTask("t", 1, {"cpu": 3000.0, "mem": 100.0, "io": 10.0},
+                     peak_mem_gb=4.0)])
+    warm = Engine(specs, make_scheduler("fair", specs, seed=0), db,
+                  EngineConfig(seed=0))
+    # low-scale warm run: small historic peaks (the escalation predictor
+    # under-sizes the real run) and a short p95 (speculation fires early)
+    warm.submit(wf, run_id=0, seed=0, input_scale=0.2)
+    warm.run()
+    eng = Engine(specs, make_scheduler("fair", specs, seed=1), db,
+                 EngineConfig(seed=1, speculation=True,
+                              speculation_factor=0.5,
+                              cancel_stale_speculative=True,
+                              quantile_method="linear",
+                              sizing=SizingConfig(strategy="escalation",
+                                                  start_fraction=0.2,
+                                                  max_retries=0)))
+    eng.nodes[specs[0].name].slow_factor = 0.05  # stretch past the p95 wake
+    eng.submit(wf, run_id=1, seed=0)
+    res = eng.run()                             # must terminate, not stick
+    assert eng.sizing_stats["oom_failures"] == 1, \
+        "scenario must actually exercise the permanent-failure path"
+    copies = [t for t in eng.all_tasks.values() if t.speculative_of]
+    assert copies, "scenario must actually launch a speculative copy"
+    assert res["makespan"] >= 0.0
+    assert not eng._spec_copies                 # pair fully resolved
+    for t in eng.all_tasks.values():
+        assert t.state in ("done", "killed"), (t.instance, t.state)
+
+
+def test_sizing_config_validation():
+    with pytest.raises(ValueError):
+        SizingConfig(strategy="bogus")
+    with pytest.raises(ValueError):
+        SizingConfig(escalation_factor=1.0)
+    with pytest.raises(ValueError):
+        SizingConfig(max_retries=-1)
+    with pytest.raises(ValueError):
+        SizingConfig(oom_progress=(0.5, 1.5))   # cannot OOM past own work
+    with pytest.raises(ValueError):
+        SizingConfig(oom_progress=(0.0, 0.5))
+    with pytest.raises(ValueError):
+        SizingConfig(quantile=1.5)
+    with pytest.raises(ValueError):
+        SizingConfig(start_fraction=0.0)
+
+
+def test_usage_quantile_lazy_sort_stays_correct_across_writes():
+    """The usage lists are append-only on the hot path and sorted lazily on
+    first quantile read; interleaved reads and writes must keep answers
+    identical to an always-sorted implementation."""
+    db = _db_with_mem([5.0, 1.0, 3.0])
+    assert db.usage_quantile("wf", "t", "mem", 1.0) == 5.0
+    db.add(TaskTrace("wf", "t", "t[9]", 0, "n0", 1.0, {"mem": 0.5}))
+    assert db.usage_quantile("wf", "t", "mem", 0.0) == 0.5
+    db.add(TaskTrace("wf", "t", "t[10]", 0, "n0", 1.0, {"mem": 9.0}))
+    assert db.usage_quantile("wf", "t", "mem", 0.5) == pytest.approx(3.0)
+    assert db.usage_quantile("wf", "t", "mem", 1.0) == 9.0

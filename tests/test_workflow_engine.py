@@ -100,6 +100,73 @@ def test_straggler_speculation_wins():
     assert res["makespan"] < res2["makespan"] * 0.8, (res["makespan"], res2["makespan"])
 
 
+def test_killed_attempts_logged_for_fairness_accounting():
+    """Regression: a task killed mid-run by a node failure consumed cores
+    for its whole partial run, but `_kill` never logged it — fairness
+    Jain-over-core-seconds and group shares undercounted tenants hit by
+    failures.  The partial attempt must appear flagged completed=False and
+    count toward service."""
+    from repro.core import fairness
+    eng, res, db = _run(wf=_wf(16), fail=(1.0, "a-c2-0"))
+    killed = [r for r in eng.assignment_log if not r.completed]
+    assert killed, "the failure should have killed at least one running task"
+    assert all(r.outcome == "node-failure" and r.node == "a-c2-0"
+               and r.end == 1.0 for r in killed)
+    # the seed-shaped assignments stay completions-only (equivalence), the
+    # log carries both
+    assert len(eng.assignment_log) == len(res["assignments"]) + len(killed)
+    # service accounting includes the partial attempts
+    _, _, m_all = fairness.core_seconds_by(eng.assignment_log)
+    _, _, m_done = fairness.core_seconds_by(
+        [r for r in eng.assignment_log if r.completed])
+    lost = sum((r.end - r.start) * r.cores for r in killed)
+    assert float(m_all.sum()) == pytest.approx(float(m_done.sum()) + lost)
+    assert lost > 0
+
+
+def test_requeued_original_avoids_speculative_copys_node():
+    """Regression: `_feasible` only blocked the copy from the *original's*
+    node.  After the original is requeued by a node failure while its copy
+    runs, nothing stopped both halves from sharing a node — defeating
+    speculation.  The requeued original must not overlap its running copy
+    on the same node."""
+    specs = cluster_555()
+    db = TraceDB()
+    wf = WorkflowSpec("spec", [
+        AbstractTask("t", 1, {"cpu": 2000.0, "mem": 100.0, "io": 10.0}, 1.0)])
+    warm = Engine(specs, make_scheduler("fair", specs, seed=0), db,
+                  EngineConfig(seed=0))
+    warm.submit(wf, run_id=0, seed=0)
+    warm.run()                       # p95 history so speculation can fire
+    sched = make_scheduler("fillnodes", specs, seed=0)
+    straggler = sched.nodes[0]       # fillnodes places the task here first
+    eng = Engine(specs, sched, db,
+                 EngineConfig(seed=1, speculation=True,
+                              speculation_factor=1.2,
+                              cancel_stale_speculative=True))
+    eng.nodes[straggler].slow_factor = 0.01
+    eng.submit(wf, run_id=1, seed=0)
+    # fail the straggling node after the copy has launched elsewhere: the
+    # original is requeued while its copy runs
+    p95 = db.runtime_quantile("spec", "t", 0.95)
+    eng.fail_node_at(1.5 * p95, straggler)
+    eng.run()
+    pair = {t.instance: t for t in eng.all_tasks.values()}
+    copies = [t for t in pair.values() if t.speculative_of]
+    assert copies, "speculation should have launched a copy"
+    # reconstruct intervals per (instance, node); the original must never
+    # run on a node while its copy is running there
+    recs = eng.assignment_log
+    for c in copies:
+        c_recs = [r for r in recs if r.instance == c.instance]
+        o_recs = [r for r in recs if r.instance == c.speculative_of]
+        for rc in c_recs:
+            for ro in o_recs:
+                overlap = min(rc.end, ro.end) - max(rc.start, ro.start)
+                assert not (rc.node == ro.node and overlap > 1e-9), \
+                    (rc, ro)
+
+
 def test_multi_workflow_both_finish():
     specs = cluster_555()
     db = TraceDB()
