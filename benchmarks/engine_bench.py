@@ -31,6 +31,16 @@ from repro.workflow.dag import AbstractTask, WorkflowSpec
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 OUT_PATH = os.path.join(RESULTS, "BENCH_engine.json")
+# quick-mode default: keep CI smoke output away from the committed file
+QUICK_OUT_PATH = os.path.join(RESULTS, "BENCH_engine.quick.json")
+
+# CI perf gate: the apples-to-apples speedup over the frozen seed engine
+# must not regress below the floor — the bench *fails* instead of only
+# uploading the artifact.  Quick (CI) mode also gates makespan parity; its
+# floor is lower because at 64x2k the seed baseline is only a few seconds,
+# so the ratio is noisier (historically ~15x there vs ~230x at fleet scale).
+SPEEDUP_FLOOR = 5.0          # full mode, the ROADMAP floor
+QUICK_SPEEDUP_FLOOR = 3.0    # CI smoke scale
 
 # the paper's three 8-vCPU tiers (Table II ground truth), fleet-replicated
 _TIERS = (
@@ -100,11 +110,19 @@ def _bench_once(engine_mod, sched_name: str, n_nodes: int, n_instances: int,
     t0 = time.perf_counter()
     res = eng.run()
     wall = time.perf_counter() - t0
-    return {"engine": engine_mod.__name__.rsplit(".", 1)[-1],
-            "scheduler": sched_name, "n_nodes": n_nodes,
-            "n_instances": n_instances, "wall_s": round(wall, 3),
-            "makespan": res["makespan"],
-            "tasks_completed": len(res["assignments"])}
+    rec = {"engine": engine_mod.__name__.rsplit(".", 1)[-1],
+           "scheduler": sched_name, "n_nodes": n_nodes,
+           "n_instances": n_instances, "wall_s": round(wall, 3),
+           "warm_labels": warm_labels,
+           "makespan": res["makespan"],
+           "tasks_completed": len(res["assignments"])}
+    # per-phase attribution (vectorized engine only): scheduling wall vs
+    # event-loop wall vs monitor-ingest wall, so a future regression is
+    # attributable to the layer that caused it
+    phases = getattr(eng, "phase_wall", None)
+    if phases:
+        rec["phase_wall_s"] = {k: round(v, 3) for k, v in phases.items()}
+    return rec
 
 
 def _kmeans_fleet_probe(n_profiles: int) -> dict:
@@ -127,8 +145,12 @@ def _kmeans_fleet_probe(n_profiles: int) -> dict:
 
 
 def main(quick: bool = False, seed_baseline: bool = True,
-         out_path: str = OUT_PATH) -> dict:
+         out_path: str | None = None) -> dict:
     print("engine_bench")
+    if out_path is None:
+        # quick (CI/smoke) runs must not clobber the committed fleet-scale
+        # trajectory file in a contributor's working tree
+        out_path = QUICK_OUT_PATH if quick else OUT_PATH
     if quick:
         scales = [(64, 2_000)]
         head_scale = (64, 2_000)
@@ -138,6 +160,7 @@ def main(quick: bool = False, seed_baseline: bool = True,
         head_scale = (1_000, 50_000)
         kmeans_n = 100_000
     runs = []
+    gate_failures: list[str] = []
     for n_nodes, n_instances in scales:
         for sched_name in SCHEDULERS:
             rec = _bench_once(engine, sched_name, n_nodes, n_instances)
@@ -155,27 +178,49 @@ def main(quick: bool = False, seed_baseline: bool = True,
         runs.append(ref)
         print(f"engine_bench/seed/{head_scale[0]}x{head_scale[1]}/fair,"
               f"{ref['wall_s'] * 1e6:.0f},makespan={ref['makespan']:.0f}")
-        assert ref["makespan"] == new["makespan"], \
-            "seed and vectorized engines diverged on the fleet workload"
+        if ref["makespan"] != new["makespan"]:
+            gate_failures.append(
+                "seed and vectorized engines diverged on the fleet workload "
+                f"({ref['makespan']!r} != {new['makespan']!r})")
+        # the speedup block reuses the exact runs[] measurements it names
+        # (same-process, same warm-labels protocol) and cross-references
+        # them by index so the trajectory number is unambiguous
         speedup = {"scale": f"{head_scale[0]}x{head_scale[1]}",
                    "scheduler": "fair",
                    "seed_wall_s": ref["wall_s"],
                    "vectorized_wall_s": new["wall_s"],
+                   "vectorized_run_index": runs.index(new),
+                   "seed_run_index": runs.index(ref),
+                   "same_run_timing": True,
                    "speedup": round(ref["wall_s"] / new["wall_s"], 2)}
         print(f"# speedup vs seed engine at {speedup['scale']}: "
               f"{speedup['speedup']}x "
               f"({ref['wall_s']:.1f}s -> {new['wall_s']:.1f}s)")
+        floor = QUICK_SPEEDUP_FLOOR if quick else SPEEDUP_FLOOR
+        if speedup["speedup"] < floor:
+            gate_failures.append(
+                f"speedup_vs_seed {speedup['speedup']}x fell below the "
+                f"floor of {floor}x ({'quick' if quick else 'full'} mode)")
     km = _kmeans_fleet_probe(kmeans_n)
     print(f"engine_bench/choose_k/{km['n_profiles']},{km['wall_s'] * 1e6:.0f},"
           f"k={km['k']} sil={km['silhouette']}")
     summary = {"meta": {"quick": quick, "generated_unix": int(time.time())},
                "runs": runs, "speedup_vs_seed": speedup,
                "choose_k_fleet": km}
+    if gate_failures:
+        summary["gate_failures"] = gate_failures
+    # always write the artifact — on a gate failure the per-phase breakdown
+    # is exactly the diagnostic a regression hunt needs — then fail the job
     if os.path.dirname(out_path):
         os.makedirs(os.path.dirname(out_path), exist_ok=True)
     with open(out_path, "w") as f:
         json.dump(summary, f, indent=1)
     print(f"# wrote {out_path}")
+    if gate_failures:
+        # RuntimeError, not SystemExit: benchmarks/run.py's suite guard
+        # catches Exception and records the failure without killing the
+        # other suites; standalone __main__ still exits non-zero
+        raise RuntimeError("CI perf gate: " + "; ".join(gate_failures))
     return summary
 
 
@@ -185,7 +230,9 @@ if __name__ == "__main__":
                     help="CI smoke: 64 nodes / 2k instances")
     ap.add_argument("--no-seed-baseline", action="store_true",
                     help="skip the (slow) frozen seed engine baseline run")
-    ap.add_argument("--out", default=OUT_PATH)
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default: BENCH_engine.json, or "
+                         "BENCH_engine.quick.json with --quick)")
     args = ap.parse_args()
     main(quick=args.quick, seed_baseline=not args.no_seed_baseline,
          out_path=args.out)

@@ -66,6 +66,49 @@ def weighted_priority_groups(info: GroupInfo, task_labels: dict,
     return _rank_groups(info, scores)
 
 
+def node_loads(na, cand: np.ndarray) -> np.ndarray:
+    """Load metric of candidate node indices ``cand`` over the engine's
+    node SoA ``na`` — the single array-side source of the formula, mirroring
+    ``SimNode.load()`` operand-for-operand
+    (``0.5 * ((1 - free_cores/cores) + (1 - free_mem/mem))``) so every
+    array-path argmin is bit-for-bit the dict path's choice."""
+    return 0.5 * ((1.0 - na.free_cores[cand] / na.cores[cand])
+                  + (1.0 - na.free_mem[cand] / na.mem_gb[cand]))
+
+
+def least_loaded_idx(na, cand: np.ndarray, rng=None) -> int:
+    """Least-loaded node among candidate indices ``cand``, ties broken by
+    one RNG draw per candidate — the array twin of
+    ``min(cands, key=lambda n: (load[n], rng.random()))``; np.lexsort is
+    stable, matching Python ``min``'s first-of-equals tie-break."""
+    ties = rng.random(cand.size) if rng is not None \
+        else np.zeros(cand.size, np.float64)
+    return int(cand[np.lexsort((ties, node_loads(na, cand)))[0]])
+
+
+def pick_node_idx(info: GroupInfo, task_labels, na, mask: np.ndarray,
+                  rng=None, priority=None) -> int | None:
+    """Array-native twin of ``pick_node``: a masked argmin per priority
+    group over the engine's node SoA instead of per-group Python list-comps
+    and a dict of loads.  ``mask`` is the per-task feasibility bitmap over
+    node indices; returns a node index or None.  RNG draw counts and order
+    match ``pick_node`` exactly (one draw per feasible candidate of the
+    first non-empty group, in ``group_nodes`` order), so both paths consume
+    identical random streams.
+    """
+    if task_labels is None:         # unknown task -> fair: least-loaded overall
+        cand = np.flatnonzero(mask)
+        return least_loaded_idx(na, cand, rng) if cand.size else None
+    members = info.member_index_arrays(na.index)
+    for g in (priority if priority is not None
+              else priority_groups(info, task_labels)):
+        sub = members[g]
+        cand = sub[mask[sub]]
+        if cand.size:
+            return least_loaded_idx(na, cand, rng)
+    return None
+
+
 def pick_node(info: GroupInfo, task_labels, node_load, feasible,
               rng=None, priority=None) -> str | None:
     """node_load: node -> load metric (lower = freer); feasible: node -> bool.

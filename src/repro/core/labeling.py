@@ -47,6 +47,24 @@ class GroupInfo:
         return np.array([self.node_labels[group][f] for f in TASK_FEATURES],
                         np.float64)
 
+    def member_index_arrays(self, index: dict) -> list:
+        """Per-group node-*index* arrays over an engine's node indexing
+        (``index``: node name -> array position), for the array-native
+        phase-3 fast path: ``allocation.pick_node_idx`` turns the per-group
+        Python list-comps of ``pick_node`` into masked gathers over these.
+
+        Built once per index map (identity-keyed memo — schedulers bind one
+        cluster for an engine's lifetime) and ordered exactly like
+        ``group_nodes``, so tie-break RNG draws happen in the same node
+        order as the dict path.
+        """
+        if getattr(self, "_midx_src", None) is not index:
+            self._midx = [
+                np.array([index[n] for n in self.group_nodes[g]], np.int64)
+                for g in range(self.n_groups)]
+            self._midx_src = index
+        return self._midx
+
 
 def build_group_info(profiles: list[NodeProfile], labels) -> GroupInfo:
     labels = np.asarray(labels)

@@ -64,6 +64,13 @@ class TraceDB:
         self._usages_dirty: set = set()
         self._wf_tasks = defaultdict(set)           # workflow -> task names
         self._usage_cache: dict = {}                # (wf, feature) -> (version, list)
+        # runtime-quantile memo: (wf, task, q, method) -> (version, value).
+        # The speculation machinery reads the p95 of every running task on
+        # every event; between history writes those reads are pure, so one
+        # epoch-keyed entry per distinct task name turns the per-event cost
+        # into a dict hit (stale entries are overwritten in place, keeping
+        # the memo bounded by the distinct key count).
+        self._rq_cache: dict = {}
 
     # -- writes ---------------------------------------------------------
     def add(self, trace: TaskTrace) -> None:
@@ -123,10 +130,14 @@ class TraceDB:
 
     def runtime_quantile(self, workflow: str, task_name: str, q: float,
                          method: str = "seed") -> Optional[float]:
+        key = (workflow, task_name, q, method)
+        hit = self._rq_cache.get(key)
+        if hit is not None and hit[0] == self.version:
+            return hit[1]
         xs = self._runtimes[(workflow, task_name)]   # maintained sorted
-        if not xs:
-            return None
-        return self._quantile(xs, q, method)
+        val = self._quantile(xs, q, method) if xs else None
+        self._rq_cache[key] = (self.version, val)
+        return val
 
     def usage_quantile(self, workflow: str, task_name: str, feature: str,
                        q: float, method: str = "linear") -> Optional[float]:

@@ -9,6 +9,18 @@ allocation, falling back to fair placement for unknown tasks.
 Interface consumed by workflow.engine.Engine:
     order(queue, db) -> reordered queue
     select_node(task, nodes, feasible, db) -> node name | None
+
+Array-native fast path (opt-in via ``supports_array_placement``): the engine
+binds its node structure-of-arrays once per run (``bind_cluster(na, nodes)``)
+and then places through ``select_node_idx(task, mask, db) -> node index``,
+where ``mask`` is a numpy feasibility bitmap over node indices.  Every
+built-in scheduler implements it as a masked argmin/argsort over
+pre-bound per-node arrays — no per-placement dicts, list-comps, or
+re-sorts — while drawing tie-break randoms in exactly the dict path's
+order, so both paths are bit-for-bit interchangeable (pinned by
+``tests/test_scheduler_protocol.py`` and the equivalence suite).  External
+schedulers that only implement ``select_node`` keep working: the engine
+feature-detects and falls back to the dict path.
 """
 from __future__ import annotations
 
@@ -24,6 +36,23 @@ from repro.core.profiler import NodeProfile, profile_cluster_synthetic
 
 class Scheduler:
     name = "base"
+    # Array-path opt-in.  The engine additionally verifies (by MRO depth)
+    # that a subclass overriding select_node also overrides
+    # select_node_idx — otherwise the array path would silently bypass the
+    # customized dict semantics — and falls back to the dict path if not.
+    supports_array_placement = False
+
+    def bind_cluster(self, na, nodes) -> None:
+        """Bind the engine's node SoA (``na``) + SimNode view (``nodes``)
+        for the array fast path.  Called once per run; idempotent."""
+        if getattr(self, "_na", None) is not na:
+            self._na = na
+            self._sim_nodes = nodes
+            self._on_bind(na)
+
+    def _on_bind(self, na) -> None:
+        """Hook for per-cluster derived arrays (rank permutations, speed
+        columns, group index arrays)."""
 
     def order(self, queue, db: TraceDB):
         return queue
@@ -35,6 +64,7 @@ class Scheduler:
 class RoundRobinScheduler(Scheduler):
     """Cycle through the (shuffled) node list; skip infeasible nodes."""
     name = "roundrobin"
+    supports_array_placement = True
 
     def __init__(self, node_names, seed: int = 0):
         self.nodes = list(node_names)
@@ -49,12 +79,28 @@ class RoundRobinScheduler(Scheduler):
                 return cand
         return None
 
+    def _on_bind(self, na):
+        # shuffled-list position -> node index
+        self._perm = np.array([na.index[n] for n in self.nodes], np.int64)
+
+    def select_node_idx(self, task, mask, db):
+        # rotated-mask scan: first feasible shuffled-list position >= _i,
+        # wrapping — identical to the dict path's modular probe loop
+        live = np.flatnonzero(mask[self._perm])
+        if live.size == 0:
+            return None
+        pos = int(np.searchsorted(live, self._i))
+        j = int(live[pos]) if pos < live.size else int(live[0])
+        self._i = (j + 1) % len(self.nodes)
+        return int(self._perm[j])
+
 
 class FairScheduler(Scheduler):
     """Least-reserved node first (YARN fair / Slurm default flavour).
     Ties break randomly — the paper shuffles node lists between runs so no
     scheduler is accidentally speed-aware through list order."""
     name = "fair"
+    supports_array_placement = True
 
     def __init__(self, seed: int = 0):
         self.rng = np.random.default_rng(seed)
@@ -65,10 +111,17 @@ class FairScheduler(Scheduler):
             return None
         return min(cands, key=lambda n: (nodes[n].load(), self.rng.random()))
 
+    def select_node_idx(self, task, mask, db):
+        cand = np.flatnonzero(mask)
+        if cand.size == 0:
+            return None
+        return allocation.least_loaded_idx(self._na, cand, self.rng)
+
 
 class FillNodesScheduler(Scheduler):
     """Fully claim a node before assigning to the next one in the list."""
     name = "fillnodes"
+    supports_array_placement = True
 
     def __init__(self, node_names, seed: int = 0):
         self.nodes = list(node_names)
@@ -85,6 +138,21 @@ class FillNodesScheduler(Scheduler):
             if feasible.get(cand):
                 return cand
         return None
+
+    def _on_bind(self, na):
+        self._rank_arr = np.array([self._rank[n] for n in na.names], np.int64)
+
+    def select_node_idx(self, task, mask, db):
+        # the dict path re-sorts every node per placement just to take the
+        # first feasible one; the winner is simply the feasible argmin of
+        # (is-empty, rank) — rank is unique, so one flat integer key does it
+        cand = np.flatnonzero(mask)
+        if cand.size == 0:
+            return None
+        na = self._na
+        empty = na.free_cores[cand] == na.cores[cand]
+        key = np.where(empty, len(self.nodes), 0) + self._rank_arr[cand]
+        return int(cand[np.argmin(key)])
 
 
 class _ProfiledScheduler(Scheduler):
@@ -124,17 +192,36 @@ class SJFNScheduler(_ProfiledScheduler):
     Nodes of the same machine type benchmark identically, so speed ties
     break to the least-loaded node (then randomly)."""
     name = "sjfn"
+    supports_array_placement = True
 
     def __init__(self, specs, seed: int = 0):
         super().__init__(specs, seed)
         self.rng = np.random.default_rng(seed + 2)
         self.speed = {p.node: p.features["cpu"] for p in self.profiles}
+        self._est_key = None         # (db.uid, db.version) behind _est_cache
+        self._est_cache: dict = {}   # (wf, task name) -> runtime estimate
 
     def order(self, queue, db):
-        def est(t):
-            r = db.mean_runtime(t.workflow, t.name)
-            return r if r is not None else float("inf")
-        return sorted(queue, key=est)
+        if len(queue) < 2:
+            return queue
+        # stable argsort over a per-task-name estimate column, memoized per
+        # history epoch — the dict path called db.mean_runtime once per
+        # *task instance* per pass (50k Python calls per event at fleet
+        # scale); names repeat, so one dict hit per instance remains
+        key = (db.uid, db.version)
+        if self._est_key != key:
+            self._est_key, self._est_cache = key, {}
+        cache = self._est_cache
+        est = np.empty(len(queue), np.float64)
+        for i, t in enumerate(queue):
+            k = (t.workflow, t.name)
+            v = cache.get(k)
+            if v is None:
+                r = db.mean_runtime(*k)
+                cache[k] = v = r if r is not None else np.inf
+            est[i] = v
+        idx = np.argsort(est, kind="stable")    # == sorted(queue, key=est)
+        return [queue[i] for i in idx]
 
     def select_node(self, task, nodes, feasible, db):
         cands = [n for n, ok in feasible.items() if ok]
@@ -144,11 +231,26 @@ class SJFNScheduler(_ProfiledScheduler):
         return min(cands, key=lambda n: (-round(self.speed[n], -1),
                                          nodes[n].load(), self.rng.random()))
 
+    def _on_bind(self, na):
+        # the dict path's primary sort key, pre-negated and pre-rounded
+        self._negspeed = np.array([-round(self.speed[n], -1)
+                                   for n in na.names], np.float64)
+
+    def select_node_idx(self, task, mask, db):
+        cand = np.flatnonzero(mask)
+        if cand.size == 0:
+            return None
+        loads = allocation.node_loads(self._na, cand)
+        ties = self.rng.random(cand.size)
+        order = np.lexsort((ties, loads, self._negspeed[cand]))
+        return int(cand[order[0]])
+
 
 class TaremaScheduler(_ProfiledScheduler):
     """Phase 3: score-based group allocation, least-loaded node in group,
     fair fallback for unknown tasks (paper §IV-D)."""
     name = "tarema"
+    supports_array_placement = True
 
     def __init__(self, specs, seed: int = 0):
         super().__init__(specs, seed)
@@ -169,6 +271,12 @@ class TaremaScheduler(_ProfiledScheduler):
         load = {n: nodes[n].load() for n in nodes}
         return allocation.pick_node(self.info, labels, load, feasible, self.rng,
                                     priority=priority)
+
+    def select_node_idx(self, task, mask, db):
+        labels = self.task_labels(db, task.workflow, task.name)
+        priority = self._cached_priority(labels) if labels is not None else None
+        return allocation.pick_node_idx(self.info, labels, self._na, mask,
+                                        self.rng, priority=priority)
 
 
 class WeightedTaremaScheduler(TaremaScheduler):
@@ -213,8 +321,13 @@ class WeightedTaremaScheduler(TaremaScheduler):
 
     def order(self, queue, db):
         # stable sort: under-served tenants first, submission order within
-        return sorted(queue,
-                      key=lambda t: self._virtual[getattr(t, "tenant", "default")])
+        if len(queue) < 2:
+            return queue
+        vt = np.fromiter(
+            (self._virtual[getattr(t, "tenant", "default")] for t in queue),
+            np.float64, len(queue))
+        idx = np.argsort(vt, kind="stable")
+        return [queue[i] for i in idx]
 
     def _live_cores(self, nodes) -> dict:
         """Running cores per tenant from this scheduler's own allocations,
@@ -239,55 +352,80 @@ class WeightedTaremaScheduler(TaremaScheduler):
         entitled = self._weight(tenant) / wsum if wsum > 0 else 1.0
         return used.get(tenant, 0.0) / total - entitled - self.share_tolerance
 
+    def _priority_for(self, task, tenant, labels, nodes):
+        """Group priority list for one placement (None for unlabeled tasks):
+        the paper's ordering at/under share, usage-penalized above it.
+        Shared by the dict and array paths."""
+        if labels is None:
+            return None
+        overuse = self._overuse(tenant, nodes)
+        if overuse <= 0.0:
+            # at/under share this is exactly the paper's ordering, so
+            # reuse the parent's per-label-vector memo
+            return self._cached_priority(labels)
+        # base scores are overuse-independent: memoize the jnp
+        # dispatch, pay only the numpy penalty + sort per placement
+        key = tuple(sorted(labels.items()))
+        base = self._scores_cache.get(key)
+        if base is None:
+            base = allocation.task_scores(self.info, labels)
+            self._scores_cache[key] = base
+        return allocation.weighted_priority_groups(
+            self.info, labels, overuse, self.pressure, base_scores=base)
+
+    def _charge_placement(self, task, tenant, node, db, nodes):
+        """Post-placement bookkeeping (both paths).
+
+        WFQ-charge each logical task once: re-placements after a node
+        failure and speculative copies are not new demand, and must
+        not push their (victim) tenant further back in the queue.
+        OOM retries (EngineConfig.sizing) ARE new demand — the retry
+        re-runs the full work — so the engine clears the flag when it
+        requeues an OOM'd attempt and the tenant is charged again.
+        The charged flag lives on the task object so its lifetime is
+        exactly the instance's (no unbounded scheduler-side set).
+        """
+        if not getattr(task, "_wfq_charged", False) \
+                and not task.speculative_of:
+            est = db.mean_runtime(task.workflow, task.name) or 1.0
+            # stride-scheduling catch-up: an idle/late tenant resumes at
+            # the *live* tenants' virtual-time floor instead of from its
+            # stale (tiny) value, so banked idle time cannot be spent
+            # monopolizing the queue on arrival.  Purge first: the live
+            # set must be a function of engine state, not of how many
+            # placement probes happened to run purges earlier (the array
+            # path legitimately skips probes for infeasible tasks).
+            self._live_cores(nodes)
+            active = {t for (t, _, _) in self._alloc.values()} - {tenant}
+            floor = min((self._virtual[t] for t in active),
+                        default=self._virtual[tenant])
+            self._virtual[tenant] = \
+                max(self._virtual[tenant], floor) \
+                + task.req_cores * est / self._weight(tenant)
+            task._wfq_charged = True
+        self._alloc[task.instance] = (tenant, task.req_cores, node)
+
     def select_node(self, task, nodes, feasible, db):
         tenant = getattr(task, "tenant", "default")
         labels = self.task_labels(db, task.workflow, task.name)
-        priority = None
-        if labels is not None:
-            overuse = self._overuse(tenant, nodes)
-            if overuse <= 0.0:
-                # at/under share this is exactly the paper's ordering, so
-                # reuse the parent's per-label-vector memo
-                priority = self._cached_priority(labels)
-            else:
-                # base scores are overuse-independent: memoize the jnp
-                # dispatch, pay only the numpy penalty + sort per placement
-                key = tuple(sorted(labels.items()))
-                base = self._scores_cache.get(key)
-                if base is None:
-                    base = allocation.task_scores(self.info, labels)
-                    self._scores_cache[key] = base
-                priority = allocation.weighted_priority_groups(
-                    self.info, labels, overuse, self.pressure,
-                    base_scores=base)
+        priority = self._priority_for(task, tenant, labels, nodes)
         load = {n: nodes[n].load() for n in nodes}
         node = allocation.pick_node(self.info, labels, load, feasible,
                                     self.rng, priority=priority)
         if node is not None:
-            # WFQ-charge each logical task once: re-placements after a node
-            # failure and speculative copies are not new demand, and must
-            # not push their (victim) tenant further back in the queue.
-            # OOM retries (EngineConfig.sizing) ARE new demand — the retry
-            # re-runs the full work — so the engine clears the flag when it
-            # requeues an OOM'd attempt and the tenant is charged again.
-            # The charged flag lives on the task object so its lifetime is
-            # exactly the instance's (no unbounded scheduler-side set).
-            if not getattr(task, "_wfq_charged", False) \
-                    and not task.speculative_of:
-                est = db.mean_runtime(task.workflow, task.name) or 1.0
-                # stride-scheduling catch-up: an idle/late tenant resumes at
-                # the active tenants' virtual-time floor instead of from its
-                # stale (tiny) value, so banked idle time cannot be spent
-                # monopolizing the queue on arrival
-                active = {t for (t, _, _) in self._alloc.values()} - {tenant}
-                floor = min((self._virtual[t] for t in active),
-                            default=self._virtual[tenant])
-                self._virtual[tenant] = \
-                    max(self._virtual[tenant], floor) \
-                    + task.req_cores * est / self._weight(tenant)
-                task._wfq_charged = True
-            self._alloc[task.instance] = (tenant, task.req_cores, node)
+            self._charge_placement(task, tenant, node, db, nodes)
         return node
+
+    def select_node_idx(self, task, mask, db):
+        tenant = getattr(task, "tenant", "default")
+        labels = self.task_labels(db, task.workflow, task.name)
+        priority = self._priority_for(task, tenant, labels, self._sim_nodes)
+        i = allocation.pick_node_idx(self.info, labels, self._na, mask,
+                                     self.rng, priority=priority)
+        if i is not None:
+            self._charge_placement(task, tenant, self._na.names[i], db,
+                                   self._sim_nodes)
+        return i
 
 
 def make_scheduler(name: str, specs, seed: int = 0, **kw) -> Scheduler:

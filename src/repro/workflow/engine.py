@@ -20,9 +20,23 @@ bit-for-bit identical makespans and assignment traces):
     are maintained incrementally on start/finish/kill, so each event costs
     a handful of vectorized ops instead of a Python loop re-deriving every
     rate twice;
-  * the next-finish search is a masked argmin over append-only task slots;
+  * the next-finish search is a masked argmin over kept-dense task slots;
     slot order equals ``running``-dict insertion order, so tie-breaking is
-    identical to the seed's ``min`` over dict items.
+    identical to the seed's ``min`` over dict items;
+  * placement runs through the *array-native scheduler protocol*: one
+    numpy feasibility mask per distinct (cores, mem) demand, kept across
+    passes and repaired by index pokes as events dirty single nodes, with
+    schedulers choosing via ``select_node_idx(task, mask, db)`` (masked
+    argmin/argsort over arrays bound once per run) and a blocked-queue
+    early exit that stops a pass once no enabled node can host the min
+    demand remaining — a saturated deep queue costs O(placements), not
+    O(queue x nodes), per event.  External schedulers without the fast
+    path are feature-detected and served by the legacy per-task dict pass
+    (``EngineConfig.placement_path``); both paths are pinned bit-for-bit
+    interchangeable by ``tests/test_scheduler_protocol.py``;
+  * the speculation machinery (straggler scan + p95 wake-ups) runs off
+    per-slot cached quantile state maintained on history writes instead of
+    per-event Python loops over ``running``.
 
 Floating-point evaluation order inside the rate formulas is kept exactly as
 in the seed so results match bit-for-bit, not just statistically.
@@ -58,6 +72,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import time
 from collections import defaultdict
 from typing import Optional
 
@@ -94,7 +109,8 @@ class _NodeArrays:
 
     __slots__ = ("names", "index", "cores", "mem_gb", "cpu_speed",
                  "app_factor", "io_seq", "mem_static", "bw_scale",
-                 "free_cores", "free_mem", "n_running", "slow", "disabled")
+                 "free_cores", "free_mem", "n_running", "slow", "disabled",
+                 "rate_cpu", "rate_mem", "rate_stale", "mask_dirty")
 
     def __init__(self, specs: list[NodeSpec], bw_exp: float):
         self.names = [s.name for s in specs]
@@ -114,6 +130,28 @@ class _NodeArrays:
         self.n_running = np.zeros(len(specs), np.int64)
         self.slow = np.ones(len(specs), np.float64)
         self.disabled = np.zeros(len(specs), bool)
+        # cached per-node cpu/mem service rates: both are pure elementwise
+        # functions of node-local state (occupancy, co-resident count, slow
+        # factor), so only nodes whose state changed since the last event
+        # need recomputing — `rate_stale` marks them (all at first use)
+        self.rate_cpu = np.zeros(len(specs), np.float64)
+        self.rate_mem = np.zeros(len(specs), np.float64)
+        self.rate_stale = np.ones(len(specs), bool)
+        # nodes whose free cores/mem/disabled state changed since the last
+        # placement pass repaired its cached feasibility masks (engine-
+        # drained; SimNode property writes append here too so external
+        # mutations — test injection, failure handling — are never missed)
+        self.mask_dirty: list = []
+
+    def feasible_mask(self, req_cores, req_mem_gb) -> np.ndarray:
+        """Vector form of THE feasibility predicate (single source, with
+        ``feasible_at`` as its scalar twin for incremental mask repair)."""
+        return ((~self.disabled) & (self.free_cores >= req_cores)
+                & (self.free_mem >= req_mem_gb))
+
+    def feasible_at(self, i: int, req_cores, req_mem_gb) -> bool:
+        return bool((not self.disabled[i]) and self.free_cores[i] >= req_cores
+                    and self.free_mem[i] >= req_mem_gb)
 
 
 class SimNode:
@@ -151,6 +189,7 @@ class SimNode:
     @slow_factor.setter
     def slow_factor(self, v: float):
         self._na.slow[self._i] = v
+        self._na.rate_stale[self._i] = True   # cpu rate depends on slow
 
     @property
     def disabled(self) -> bool:
@@ -159,6 +198,7 @@ class SimNode:
     @disabled.setter
     def disabled(self, v: bool):
         self._na.disabled[self._i] = v
+        self._na.mask_dirty.append(self._i)
 
     def load(self) -> float:
         cores = 1.0 - self.free_cores / self.spec.cores
@@ -187,6 +227,15 @@ class EngineConfig:
     # None (default) reserves every instance's static spec request and
     # never raises OOM events — bit-for-bit seed-equivalent.
     sizing: Optional[SizingConfig] = None
+    # Placement path: "auto" uses the array-native scheduler protocol
+    # (select_node_idx over a numpy feasibility mask, incremental per-pass
+    # mask maintenance, blocked-queue early exit) whenever the scheduler
+    # opts in, falling back to the per-task dict interface otherwise
+    # (external schedulers, or subclasses that customized select_node
+    # without an array twin).  "dict" forces the legacy path; "array"
+    # requires the fast path and raises if the scheduler can't serve it.
+    # Both paths are bit-for-bit identical (tests/test_scheduler_protocol).
+    placement_path: str = "auto"
     seed: int = 0
     usage_noise: float = 0.03
     mem_beta: float = MEM_SHARE_BETA
@@ -235,11 +284,31 @@ class Engine:
         self._slot_cap = 256
         self._rem = np.zeros((self._slot_cap, 3), np.float64)
         self._slot_node = np.zeros(self._slot_cap, np.int64)
+        self._slot_io = np.ones(self._slot_cap, np.float64)   # io_seq[node]
         self._slot_active = np.zeros(self._slot_cap, bool)
         self._slot_tasks: list[Optional[TaskInstance]] = [None] * self._slot_cap
         self._n_slots = 0
         self._n_active = 0
         self._task_slot: dict[str, int] = {}
+        # speculation SoA: per-slot start time + current p95 (0.0 encodes
+        # "ineligible or no history", matching the seed's falsy-p95 guard).
+        # Maintained incrementally — on start, on history writes for the
+        # same (workflow, task), and on speculative-pair transitions — so
+        # the per-event straggler scan is a vectorized comparison instead
+        # of a Python loop re-reading quantiles for every running task.
+        # (_spec_on is re-read from the live config at every _prepare, so
+        # flipping cfg.speculation between construction and run() works.)
+        self._spec_on = self.cfg.speculation
+        self._slot_start = np.zeros(self._slot_cap, np.float64)
+        self._spec_p95 = np.zeros(self._slot_cap, np.float64)
+        self._name_slots: dict[tuple, set] = defaultdict(set)
+        # array-native placement state (decided per run in _prepare)
+        self._use_array = False
+        self._mask_cache: dict[tuple, np.ndarray] = {}
+        # per-phase wall-clock accounting (see engine_bench breakdown)
+        self._sched_wall = 0.0
+        self._monitor_wall = 0.0
+        self.phase_wall: dict = {}
         # dependency-counter scheduling state (built in _prepare at run())
         self._seq: dict[str, int] = {}           # instance -> submission order
         self._seq_counter = itertools.count()
@@ -278,63 +347,88 @@ class Engine:
 
     # ----------------------------------------------------- vectorized rates
     def _node_rates(self):
-        """Per-node (cpu, mem, io) service rates, one vectorized pass.
+        """Per-node (cpu, mem) service rates + the cluster-wide I/O-share
+        denominator, refreshed incrementally.
 
         Expression structure mirrors the seed's `_rates` exactly (same
-        operand order) so gathered per-task rates are bit-identical.
+        operand order) so gathered per-task rates are bit-identical; cpu
+        and mem are elementwise in node-local state, so only nodes flagged
+        ``rate_stale`` (their reservations or slow factor changed since the
+        last event) are recomputed.  The I/O denominator depends on the
+        global running count, so it is returned as a scalar and applied
+        after the per-task gather — ``io_seq[nd] / denom`` is the same
+        float op as gathering a pre-divided array.
         """
         na, cfg = self._na, self.cfg
-        # SMT/LLC contention: past 50% vCPU occupancy, co-runners share
-        # physical cores and last-level cache
-        occ = 1.0 - na.free_cores / na.cores
-        smt = 1.0 - cfg.smt_penalty * np.maximum(0.0, occ - 0.5) / 0.5
-        slow = na.slow * na.app_factor
-        cpu = na.cpu_speed * slow * smt
-        mem = na.mem_static * slow * na.bw_scale / np.minimum(
-            1.0 + cfg.mem_beta * np.maximum(0, na.n_running - 1), cfg.mem_cap)
-        io = na.io_seq / (1.0 + cfg.io_gamma * max(0, len(self.running) - 1))
-        return cpu, mem, io
+        if na.rate_stale.any():
+            d = np.flatnonzero(na.rate_stale)
+            # SMT/LLC contention: past 50% vCPU occupancy, co-runners share
+            # physical cores and last-level cache
+            occ = 1.0 - na.free_cores[d] / na.cores[d]
+            smt = 1.0 - cfg.smt_penalty * np.maximum(0.0, occ - 0.5) / 0.5
+            slow = na.slow[d] * na.app_factor[d]
+            na.rate_cpu[d] = na.cpu_speed[d] * slow * smt
+            na.rate_mem[d] = na.mem_static[d] * slow * na.bw_scale[d] \
+                / np.minimum(1.0 + cfg.mem_beta
+                             * np.maximum(0, na.n_running[d] - 1), cfg.mem_cap)
+            na.rate_stale[d] = False
+        io_denom = 1.0 + cfg.io_gamma * max(0, len(self.running) - 1)
+        return na.rate_cpu, na.rate_mem, io_denom
 
-    def _time_left_active(self, idx: np.ndarray) -> np.ndarray:
-        """Time-to-finish for the active slots `idx`, in slot order."""
-        cpu, mem, io = self._node_rates()
-        nd = self._slot_node[idx]
-        rem = self._rem[idx]
-        with np.errstate(divide="ignore"):
-            return rem[:, 0] / cpu[nd] + rem[:, 1] / mem[nd] + rem[:, 2] / io[nd]
+    def _time_left_full(self, n: int) -> np.ndarray:
+        """Time-to-finish over slots [0:n] — the full (kept-dense) range,
+        so every op is contiguous with no index gather of the remaining-work
+        rows.  Dead slots yield garbage values the callers mask out; active
+        slots are bit-identical to the seed's per-task math.  Callers run
+        under run()'s blanket errstate (divide/invalid ignored)."""
+        cpu, mem, io_denom = self._node_rates()
+        nd = self._slot_node[:n]
+        rem = self._rem[:n]
+        return rem[:, 0] / cpu[nd] + rem[:, 1] / mem[nd] \
+            + rem[:, 2] / (self._slot_io[:n] / io_denom)
 
-    def _advance_active(self, dt, idx: np.ndarray, tl: np.ndarray):
-        if dt <= 0 or idx.size == 0:
+    def _advance_full(self, dt, n: int, tl: np.ndarray):
+        if dt <= 0 or n == 0:
             return
-        with np.errstate(divide="ignore", invalid="ignore"):
-            frac = np.where(tl > 0, np.minimum(dt / tl, 1.0), 1.0)
-        self._rem[idx] *= (1.0 - frac)[:, None]
+        # for dt > 0, min(dt/tl, 1) needs no tl==0 guard: dt/0 == +inf
+        # saturates to 1, exactly the seed's where(tl > 0, ..., 1.0) branch
+        frac = np.minimum(dt / tl, 1.0)
+        self._rem[:n] *= (1.0 - frac)[:, None]
 
     # ------------------------------------------------------------- mechanics
-    def _feasible(self, task: TaskInstance) -> dict:
-        na = self._na
-        ok = (~na.disabled) & (na.free_cores >= task.req_cores) \
-            & (na.free_mem >= task.req_mem_gb)
-        feas = dict(zip(na.names, ok.tolist()))
+    def _spec_excluded_idx(self, task: TaskInstance) -> int:
+        """Node index a speculative pair pins away from `task`, or -1.
+
+        A speculative copy must not land beside its (straggling) original —
+        and symmetrically, a primary that re-enters the queue while its copy
+        runs (requeued by a node failure) must not land on the copy's node:
+        the seed only blocked the copy->original direction, so after a
+        requeue both halves could share a node, defeating the point of
+        speculation.  Only a *running* sibling pins a node (a finished
+        copy's node stays set but no longer excludes: the seed-pinned
+        redundant-loser path must still be placeable anywhere).
+        """
         if task.speculative_of:
-            # a speculative copy must not land beside its (straggling) original
             orig = self.all_tasks.get(task.speculative_of)
             if orig is not None and orig.node:
-                feas[orig.node] = False
+                return self._na.index[orig.node]
         else:
-            # ...and symmetrically: a primary that re-enters the queue while
-            # its copy runs (requeued by a node failure) must not land on the
-            # copy's node — the seed only blocked the copy->original
-            # direction, so after a requeue both halves could share a node,
-            # defeating the point of speculation.  Only a *running* sibling
-            # pins a node (a finished copy's node stays set but no longer
-            # excludes: the seed-pinned redundant-loser path must still be
-            # placeable anywhere).
             cid = self._spec_copies.get(task.instance)
             if cid is not None:
                 copy = self.all_tasks.get(cid)
                 if copy is not None and copy.state == "running" and copy.node:
-                    feas[copy.node] = False
+                    return self._na.index[copy.node]
+        return -1
+
+    def _feasible(self, task: TaskInstance) -> dict:
+        """Legacy dict-interface feasibility view (the array path uses the
+        mask directly — see _place_array)."""
+        na = self._na
+        ok = na.feasible_mask(task.req_cores, task.req_mem_gb)
+        feas = dict(zip(na.names, ok.tolist()))
+        j = self._spec_excluded_idx(task)
+        if j >= 0:
+            feas[na.names[j]] = False
         return feas
 
     def _alloc_slot(self) -> int:
@@ -342,6 +436,9 @@ class Engine:
             self._slot_cap *= 2
             self._rem = np.resize(self._rem, (self._slot_cap, 3))
             self._slot_node = np.resize(self._slot_node, self._slot_cap)
+            self._slot_io = np.resize(self._slot_io, self._slot_cap)
+            self._slot_start = np.resize(self._slot_start, self._slot_cap)
+            self._spec_p95 = np.resize(self._spec_p95, self._slot_cap)
             grown = np.zeros(self._slot_cap, bool)
             grown[:self._n_slots] = self._slot_active[:self._n_slots]
             self._slot_active = grown
@@ -352,19 +449,29 @@ class Engine:
 
     def _release_slot(self, instance: str):
         s = self._task_slot.pop(instance)
+        if self._spec_on:
+            t = self._slot_tasks[s]
+            self._name_slots[(t.workflow, t.name)].discard(s)
+        self._rem[s] = 0.0        # dead slots must stay NaN-free (0/rate=0)
         self._slot_active[s] = False
         self._slot_tasks[s] = None
         self._n_active -= 1
 
     def _maybe_compact(self):
-        """Drop dead slots once they dominate; stable order keeps the argmin
-        tie-break identical to the running-dict iteration order."""
-        if self._n_slots < 4096 or self._n_active * 4 >= self._n_slots:
+        """Keep the slot range dense (compact once >1/3 is dead): the
+        event math runs over [0:n_slots], so density — not just bounded
+        garbage — is what the per-event cost rides on.  Stable order keeps
+        the argmin tie-break identical to the running-dict iteration order;
+        amortized cost is O(1) per finish."""
+        if self._n_slots < 512 or self._n_active * 3 >= self._n_slots * 2:
             return
         live = np.flatnonzero(self._slot_active[:self._n_slots])
         n = live.size
         self._rem[:n] = self._rem[live]
         self._slot_node[:n] = self._slot_node[live]
+        self._slot_io[:n] = self._slot_io[live]
+        self._slot_start[:n] = self._slot_start[live]
+        self._spec_p95[:n] = self._spec_p95[live]
         self._slot_active[:n] = True
         self._slot_active[n:self._n_slots] = False
         tasks = [self._slot_tasks[i] for i in live]
@@ -373,6 +480,11 @@ class Engine:
             self._slot_tasks[i] = None
         self._n_slots = n
         self._task_slot = {t.instance: i for i, t in enumerate(tasks)}
+        if self._spec_on:
+            ns: dict = defaultdict(set)
+            for i, t in enumerate(tasks):
+                ns[(t.workflow, t.name)].add(i)
+            self._name_slots = ns
 
     def _start(self, task: TaskInstance, node_name: str):
         na = self._na
@@ -380,6 +492,8 @@ class Engine:
         na.free_cores[i] -= task.req_cores
         na.free_mem[i] -= task.req_mem_gb
         na.n_running[i] += 1
+        na.rate_stale[i] = True
+        na.mask_dirty.append(i)
         self.nodes[node_name].running.add(task.instance)
         task.state = "running"
         task.node = node_name
@@ -404,10 +518,15 @@ class Engine:
         for j, f in enumerate(_REM_FEATURES):
             self._rem[s, j] = task.work[f] * frac
         self._slot_node[s] = i
+        self._slot_io[s] = na.io_seq[i]
+        self._slot_start[s] = task.start_t
         self._slot_active[s] = True
         self._slot_tasks[s] = task
         self._task_slot[task.instance] = s
         self._n_active += 1
+        if self._spec_on:
+            self._spec_p95[s] = self._spec_p95_for(task)
+            self._name_slots[(task.workflow, task.name)].add(s)
         self.running[task.instance] = task
 
     def _on_done(self, instance: str):
@@ -429,6 +548,8 @@ class Engine:
         na.free_cores[i] += task.req_cores
         na.free_mem[i] += task.req_mem_gb
         na.n_running[i] -= 1
+        na.rate_stale[i] = True
+        na.mask_dirty.append(i)
         self.nodes[task.node].running.discard(task.instance)
         self.running.pop(task.instance, None)
         self._release_slot(task.instance)
@@ -447,16 +568,25 @@ class Engine:
             self._max_end = task.end_t
         if record and task.speculative_of is None:
             total = sum(task.work.values()) or 1.0
-            noise = lambda: 1.0 + self.rng.normal(0, self.cfg.usage_noise)
+            # one batched draw == three sequential normal() calls (same
+            # stream), in the seed's cpu/mem/io order; tolist() keeps the
+            # stored usage values plain (JSON-serializable) floats
+            noise = (1.0 + self.rng.normal(0, self.cfg.usage_noise, 3)).tolist()
             usage = {
-                "cpu": 100.0 * task.req_cores * task.work["cpu"] / total * noise(),
-                "mem": task.peak_mem_gb * noise(),
-                "io": task.work["io"] * noise(),
+                "cpu": 100.0 * task.req_cores * task.work["cpu"] / total * noise[0],
+                "mem": task.peak_mem_gb * noise[1],
+                "io": task.work["io"] * noise[2],
             }
+            t0 = time.perf_counter()
             self.db.add(TaskTrace(task.workflow, task.name, task.instance,
                                   task.run_id, task.node,
                                   self.t - task.start_t, usage,
                                   tenant=task.tenant))
+            self._monitor_wall += time.perf_counter() - t0
+            if self._spec_on:
+                # the new trace only moves this (workflow, task)'s p95:
+                # refresh exactly the running slots that share the name
+                self._respec_name(task.workflow, task.name)
         self._on_done(task.instance)
 
     def _kill(self, task: TaskInstance, requeue: bool,
@@ -466,6 +596,8 @@ class Engine:
         na.free_cores[i] += task.req_cores
         na.free_mem[i] += task.req_mem_gb
         na.n_running[i] -= 1
+        na.rate_stale[i] = True
+        na.mask_dirty.append(i)
         self.nodes[task.node].running.discard(task.instance)
         self.running.pop(task.instance, None)
         self._release_slot(task.instance)
@@ -536,6 +668,13 @@ class Engine:
             self._kill(task, requeue=False, reason="oom")
             if self._spec_copies.get(task.speculative_of) == task.instance:
                 del self._spec_copies[task.speculative_of]
+                if self._spec_on:
+                    # the primary lost its copy: it is straggler-eligible
+                    # again, so restore its p95 wake state
+                    s = self._task_slot.get(task.speculative_of)
+                    if s is not None:
+                        self._spec_p95[s] = self._spec_p95_for(
+                            self.all_tasks[task.speculative_of])
             return
         failed = task.req_mem_gb
         self._sizer.observe_oom(task.workflow, task.name, failed)
@@ -578,6 +717,12 @@ class Engine:
         contents of `all_tasks` so instance-id overwrites between multiple
         `submit()` calls resolve exactly as the seed's per-event rescan did.
         """
+        self._spec_on = self.cfg.speculation   # live config, per run
+        self._use_array = self._detect_array_path()
+        if self._use_array:
+            self.scheduler.bind_cluster(self._na, self.nodes)
+        self._mask_cache.clear()      # masks never survive across runs
+        self._na.mask_dirty.clear()
         self._refresh_mem_cap()       # nodes may have been disabled directly
         self._deps_left = {}
         self._dependents = defaultdict(list)
@@ -600,6 +745,38 @@ class Engine:
                                    (t.submit_t, self._seq[iid], iid))
         self._unfinished = sum(1 for t in self.all_tasks.values()
                                if t.state not in ("done", "killed"))
+
+    def _detect_array_path(self) -> bool:
+        """Feature-detect the scheduler side of the array protocol.
+
+        A scheduler serves the array path when it opts in
+        (``supports_array_placement``) and exposes both hooks — and, for
+        subclasses, when ``select_node`` was not overridden *deeper* in the
+        MRO than ``select_node_idx`` (customized dict semantics without an
+        array twin must win, not be bypassed).  ``placement_path="dict"``
+        forces the fallback; ``"array"`` raises instead of silently
+        degrading.
+        """
+        mode = self.cfg.placement_path
+        if mode not in ("auto", "array", "dict"):
+            raise ValueError(f"unknown placement_path: {mode!r}")
+        if mode == "dict":
+            return False
+        sched = self.scheduler
+        ok = (getattr(sched, "supports_array_placement", False)
+              and callable(getattr(sched, "select_node_idx", None))
+              and callable(getattr(sched, "bind_cluster", None)))
+        if ok:
+            mro = type(sched).__mro__
+            depth = lambda attr: next(
+                (i for i, c in enumerate(mro) if attr in c.__dict__),
+                len(mro))
+            ok = depth("select_node_idx") <= depth("select_node")
+        if not ok and mode == "array":
+            raise ValueError(
+                f"scheduler {getattr(sched, 'name', sched)!r} cannot serve "
+                "placement_path='array' (no select_node_idx fast path)")
+        return ok
 
     def _promote_ready(self):
         while self._arrivals and self._arrivals[0][0] <= self.t:
@@ -629,6 +806,15 @@ class Engine:
                 if task.attempt == 0:
                     task.req_mem_gb = self._size_request(task)
         self.queue = self.scheduler.order(self.queue, self.db)
+        if self._use_array:
+            self._place_array()
+        else:
+            self._place_dict()
+
+    def _place_dict(self):
+        """Per-task dict placement — the compatibility fallback for external
+        schedulers that only implement select_node."""
+        self._na.mask_dirty.clear()   # no cached masks to repair on this path
         still = []
         for task in self.queue:
             node = self.scheduler.select_node(
@@ -639,25 +825,134 @@ class Engine:
                 self._start(task, node)
         self.queue = still
 
+    def _place_array(self):
+        """Array-native placement pass (same observable behaviour as
+        _place_dict, pinned bit-for-bit by the parity/equivalence suites).
+
+        One feasibility mask per distinct (req_cores, req_mem_gb) demand is
+        kept *across* passes and maintained incrementally: placements,
+        finishes, kills and disables append their node to ``na.mask_dirty``
+        (a placement within a pass only changes its own node), so consuming
+        cores/mem is an index poke into each cached mask instead of a
+        per-task O(nodes) dict rebuild — a finish event repairs a couple of
+        entries rather than rebuilding anything.  Speculative-pair
+        exclusions are poke+restore on the shared mask.  A scheduler is
+        only invoked when the mask is non-empty — a failed dict-path select
+        never draws RNG or mutates state, so skipping the call is
+        stream-identical.  The blocked-queue early exit stops the scan once
+        no enabled node can host even the smallest (cores, mem) demand
+        remaining below the cursor: placements only shrink free resources
+        within a pass, so everything deeper is unplaceable and a saturated
+        50k-deep queue stops costing O(queue x nodes) per event.
+        """
+        na, sched, q = self._na, self.scheduler, self.queue
+        still: list[TaskInstance] = []
+        mask_cache = self._mask_cache
+        if na.mask_dirty:
+            dirty = na.mask_dirty
+            if len(dirty) * len(mask_cache) > 4 * len(na.names):
+                mask_cache.clear()          # cheaper to rebuild on demand
+            else:
+                for (rc, rm), m in mask_cache.items():
+                    for i in dirty:
+                        m[i] = na.feasible_at(i, rc, rm)
+            dirty.clear()
+        suffix_rc = suffix_rm = None
+        nq = len(q)
+        k = 0
+        while k < nq:
+            task = q[k]
+            key = (task.req_cores, task.req_mem_gb)
+            mask = mask_cache.get(key)
+            if mask is None:
+                mask = na.feasible_mask(task.req_cores, task.req_mem_gb)
+                if len(mask_cache) < 64:   # sizing can make demands unique
+                    mask_cache[key] = mask
+            j = self._spec_excluded_idx(task)
+            restore = j >= 0 and bool(mask[j])
+            if restore:
+                mask[j] = False
+            node_i = sched.select_node_idx(task, mask, self.db) \
+                if mask.any() else None
+            if restore:
+                mask[j] = True
+            if node_i is None:
+                still.append(task)
+                if suffix_rc is None:
+                    suffix_rc, suffix_rm = self._suffix_min_demand(q)
+                if k + 1 < nq:
+                    nxt = (suffix_rc[k + 1], suffix_rm[k + 1])
+                    # the common saturated case: the suffix min IS this
+                    # task's demand, whose mask we just saw empty
+                    blocked = nxt == key if not mask.any() else False
+                    if not blocked and not na.feasible_mask(
+                            suffix_rc[k + 1], suffix_rm[k + 1]).any():
+                        blocked = True
+                    if blocked:
+                        still.extend(q[k + 1:])
+                        break
+            else:
+                self._start(task, na.names[node_i])
+                # _start marked node_i dirty for the *next* pass; this pass
+                # repairs its own masks right away
+                na.mask_dirty.clear()
+                for (rc, rm), m in mask_cache.items():
+                    m[node_i] = na.feasible_at(node_i, rc, rm)
+            k += 1
+        self.queue = still
+
+    @staticmethod
+    def _suffix_min_demand(q: list) -> tuple:
+        """suffix_rc[i] / suffix_rm[i]: min req_cores / req_mem over q[i:].
+        Any task's feasible set is a subset of this joint min-demand's, so
+        "no node hosts the min demand" proves the whole suffix blocked."""
+        rc = np.fromiter((t.req_cores for t in q), np.int64, len(q))
+        rm = np.fromiter((t.req_mem_gb for t in q), np.float64, len(q))
+        return (np.minimum.accumulate(rc[::-1])[::-1],
+                np.minimum.accumulate(rm[::-1])[::-1])
+
+    def _spec_p95_for(self, task: TaskInstance) -> float:
+        """Current straggler threshold input for a running task: its p95
+        historic runtime, or 0.0 when ineligible (a copy never speculates;
+        a primary with a live copy already did) — 0.0 reproduces the seed's
+        falsy-p95 guard exactly."""
+        if task.speculative_of or task.instance in self._spec_copies:
+            return 0.0
+        p95 = self.db.runtime_quantile(task.workflow, task.name, 0.95,
+                                       method=self.cfg.quantile_method)
+        return p95 or 0.0
+
+    def _respec_name(self, workflow: str, name: str):
+        for s in self._name_slots.get((workflow, name), ()):
+            if self._slot_active[s]:
+                self._spec_p95[s] = self._spec_p95_for(self._slot_tasks[s])
+
     def _maybe_speculate(self):
         if not self.cfg.speculation:
             return
-        for task in list(self.running.values()):
-            if task.speculative_of or task.instance in self._spec_copies:
-                continue
-            p95 = self.db.runtime_quantile(task.workflow, task.name, 0.95,
-                                           method=self.cfg.quantile_method)
-            if p95 and (self.t - task.start_t) > self.cfg.speculation_factor * p95:
-                copy = dataclasses.replace(
-                    task, instance=f"{task.instance}~spec{next(self._uid)}",
-                    state="ready", node=None, remaining=None,
-                    speculative_of=task.instance)
-                self._seq[copy.instance] = next(self._seq_counter)
-                self.all_tasks[copy.instance] = copy
-                self._deps_left[copy.instance] = 0
-                self._unfinished += 1
-                self.queue.append(copy)
-                self._spec_copies[task.instance] = copy.instance
+        # vectorized straggler scan over the slot SoA: the seed looped over
+        # `running` re-reading each task's p95 every event.  Ascending slot
+        # order == running-dict insertion order, so copies are queued in
+        # the same order; the comparison keeps the seed's exact operand
+        # shape ((t - start) > factor * p95, elementwise).
+        n = self._n_slots
+        p95 = self._spec_p95[:n]
+        fire = (self._slot_active[:n] & (p95 > 0.0)
+                & ((self.t - self._slot_start[:n])
+                   > self.cfg.speculation_factor * p95))
+        for s in np.flatnonzero(fire):
+            task = self._slot_tasks[s]
+            copy = dataclasses.replace(
+                task, instance=f"{task.instance}~spec{next(self._uid)}",
+                state="ready", node=None, remaining=None,
+                speculative_of=task.instance)
+            self._seq[copy.instance] = next(self._seq_counter)
+            self.all_tasks[copy.instance] = copy
+            self._deps_left[copy.instance] = 0
+            self._unfinished += 1
+            self.queue.append(copy)
+            self._spec_copies[task.instance] = copy.instance
+            self._spec_p95[s] = 0.0      # has a copy now: ineligible
 
     def _drop_queued(self, instance: str) -> bool:
         """Cancel a ready-but-not-started instance (speculative pair
@@ -685,12 +980,26 @@ class Engine:
 
     # ------------------------------------------------------------------ run
     def run(self, max_t: float = 10_000_000.0) -> dict:
+        with np.errstate(divide="ignore"):
+            return self._run_loop(max_t)
+
+    def _run_loop(self, max_t: float) -> dict:
+        # one blanket divide-only errstate for the whole loop (zero-rate
+        # divisions in the time-left/advance math are intentional) instead
+        # of a context manager entered per event; *invalid* warnings stay
+        # live as a guardrail (a NaN reaching scheduler/monitor/sizing math
+        # is always a bug) — dead slots can't produce 0/0 because their
+        # remaining-work rows are zeroed on release
+        t_run0 = time.perf_counter()
+        self._sched_wall = self._monitor_wall = 0.0   # per-run attribution
         self._prepare()
         self._failures.sort()
         fail_i = 0
         while True:
             self._promote_ready()
+            t0 = time.perf_counter()
             self._schedule()
+            self._sched_wall += time.perf_counter() - t0
             self._maybe_speculate()
             if not self.running:
                 if self._unfinished == 0:
@@ -713,33 +1022,42 @@ class Engine:
                 continue
             # next event: earliest finishing task, next failure, or the next
             # speculation check (without it the loop can jump straight past
-            # the straggler threshold)
-            idx = np.flatnonzero(self._slot_active[:self._n_slots])
-            tl = self._time_left_active(idx)
-            j = int(np.argmin(tl))          # first min == dict-order tie-break
+            # the straggler threshold).  All slot math runs over the full
+            # (kept-dense) slot range — contiguous vectorized ops, no
+            # per-event index gather/scatter; dead slots carry garbage that
+            # the active mask screens out of the argmin.
+            n = self._n_slots
+            act = self._slot_active[:n]
+            tl = self._time_left_full(n)
+            tlm = np.where(act, tl, np.inf)
+            j = int(np.argmin(tlm))     # first min == dict-order tie-break
+            if not act[j]:              # min is +inf and landed on a dead
+                cand = np.flatnonzero(act)   # slot: first *active* inf wins
+                j = int(cand[np.argmin(tlm[cand])])
             dt = tl[j]
-            finishing: Optional[TaskInstance] = self._slot_tasks[idx[j]]
+            finishing: Optional[TaskInstance] = self._slot_tasks[j]
             if self.cfg.speculation:
-                for t_ in self.running.values():
-                    if t_.speculative_of or t_.instance in self._spec_copies:
-                        continue
-                    p95 = self.db.runtime_quantile(
-                        t_.workflow, t_.name, 0.95,
-                        method=self.cfg.quantile_method)
-                    if p95:
-                        wake = (t_.start_t + self.cfg.speculation_factor * p95
-                                + 1e-6) - self.t
-                        if 0 < wake < dt:
-                            finishing, dt = None, wake
+                # earliest straggler wake-up from the cached p95 slot state
+                # (the seed re-read every running task's quantile here);
+                # operand order matches the seed's wake expression exactly
+                p95a = self._spec_p95[:n]
+                el = act & (p95a > 0.0)
+                if el.any():
+                    wakes = (self._slot_start[:n][el]
+                             + self.cfg.speculation_factor * p95a[el]
+                             + 1e-6) - self.t
+                    wakes = wakes[(wakes > 0) & (wakes < dt)]
+                    if wakes.size:
+                        finishing, dt = None, wakes.min()
             t_next = self.t + dt
             if fail_i < len(self._failures) and self._failures[fail_i][0] < t_next:
                 ft, fnode = self._failures[fail_i]
-                self._advance_active(max(ft - self.t, 0.0), idx, tl)
+                self._advance_full(max(ft - self.t, 0.0), n, tl)
                 self.t = ft
                 fail_i += 1
                 self._disable_node(fnode)
                 continue
-            self._advance_active(dt, idx, tl)
+            self._advance_full(dt, n, tl)
             self.t = float(t_next)
             if finishing is None:      # speculation wake-up, nothing finished
                 continue
@@ -778,4 +1096,12 @@ class Engine:
             self._maybe_compact()
             if self.t > max_t:
                 raise RuntimeError("simulation exceeded max_t")
+        # per-phase wall breakdown (scheduling = order + placement passes,
+        # monitor = TraceDB ingestion, event = everything else in the loop)
+        total = time.perf_counter() - t_run0
+        self.phase_wall = {
+            "schedule_s": self._sched_wall,
+            "monitor_s": self._monitor_wall,
+            "event_s": max(total - self._sched_wall - self._monitor_wall, 0.0),
+        }
         return {"makespan": self._max_end, "assignments": self.assignments}

@@ -5,17 +5,23 @@ both implementations; makespans and full assignment traces (task, node,
 start, end) must be *identical floats*, not merely close — the refactor
 preserved the seed's floating-point evaluation order.  Speculation and
 node-failure paths are covered separately.
+
+Both placement paths of the vectorized engine — the array-native scheduler
+protocol and the legacy per-task dict fallback — are pinned against the
+same (run-once) ``engine_ref`` oracle: ``_PATHS`` parametrizes every case.
 """
 import dataclasses
 
 import pytest
 
 from repro.core.monitor import TraceDB
-from repro.core.scheduler import SCHEDULERS, make_scheduler
+from repro.core.scheduler import TENANT_SCHEDULERS, make_scheduler
 from repro.workflow import engine, engine_ref
 from repro.workflow.cluster import CLUSTERS
 from repro.workflow.dag import AbstractTask, WorkflowSpec
 from repro.workflow.nfcore import WORKFLOWS
+
+_PATHS = ("array", "dict")
 
 
 def _wf_alpha():
@@ -81,32 +87,33 @@ def _assert_identical(a, b):
 
 
 @pytest.mark.parametrize("cluster", ["5;5;5", "5;4;4;2"])
-@pytest.mark.parametrize("sched", SCHEDULERS)
+@pytest.mark.parametrize("sched", TENANT_SCHEDULERS)
 def test_equivalence_all_schedulers(cluster, sched):
-    cfg = engine.EngineConfig(seed=0)
-    ref_cfg = engine_ref.EngineConfig(seed=0)
-    _assert_identical(
-        _run(engine, cluster, sched, cfg, runs=2),
-        _run(engine_ref, cluster, sched, ref_cfg, runs=2))
+    ref = _run(engine_ref, cluster, sched, engine_ref.EngineConfig(seed=0),
+               runs=2)
+    for path in _PATHS:
+        cfg = engine.EngineConfig(seed=0, placement_path=path)
+        _assert_identical(_run(engine, cluster, sched, cfg, runs=2), ref)
 
 
 def test_equivalence_multi_workflow():
-    cfg = engine.EngineConfig(seed=0)
-    ref_cfg = engine_ref.EngineConfig(seed=0)
-    _assert_identical(
-        _run(engine, "5;5;5", "tarema", cfg,
-             workflows=("viralrecon", "cageseq")),
-        _run(engine_ref, "5;5;5", "tarema", ref_cfg,
-             workflows=("viralrecon", "cageseq")))
+    ref = _run(engine_ref, "5;5;5", "tarema", engine_ref.EngineConfig(seed=0),
+               workflows=("viralrecon", "cageseq"))
+    for path in _PATHS:
+        cfg = engine.EngineConfig(seed=0, placement_path=path)
+        _assert_identical(
+            _run(engine, "5;5;5", "tarema", cfg,
+                 workflows=("viralrecon", "cageseq")), ref)
 
 
 def test_equivalence_node_failure():
-    cfg = engine.EngineConfig(seed=0)
-    ref_cfg = engine_ref.EngineConfig(seed=0)
     for cluster, node in (("5;5;5", "a-c2-0"), ("5;4;4;2", "b-n2-1")):
-        _assert_identical(
-            _run(engine, cluster, "fair", cfg, fail=(50.0, node)),
-            _run(engine_ref, cluster, "fair", ref_cfg, fail=(50.0, node)))
+        ref = _run(engine_ref, cluster, "fair",
+                   engine_ref.EngineConfig(seed=0), fail=(50.0, node))
+        for path in _PATHS:
+            cfg = engine.EngineConfig(seed=0, placement_path=path)
+            _assert_identical(
+                _run(engine, cluster, "fair", cfg, fail=(50.0, node)), ref)
 
 
 def _restricted(cluster: str, frac: float) -> set:
@@ -124,15 +131,16 @@ def _restricted(cluster: str, frac: float) -> set:
 def test_equivalence_disabled_nodes(sched):
     """The fig8 restricted-resources path (pre-disabled nodes) must match
     the seed bit-for-bit — previously zero equivalence coverage."""
-    cfg = engine.EngineConfig(seed=0)
-    ref_cfg = engine_ref.EngineConfig(seed=0)
     for cluster, frac in (("5;5;5", 0.4), ("5;4;4;2", 0.2)):
         disabled = _restricted(cluster, frac)
-        _assert_identical(
-            _run(engine, cluster, sched, cfg, runs=2, disabled=disabled,
-                 workflows=("viralrecon", "cageseq")),
-            _run(engine_ref, cluster, sched, ref_cfg, runs=2,
-                 disabled=disabled, workflows=("viralrecon", "cageseq")))
+        ref = _run(engine_ref, cluster, sched, engine_ref.EngineConfig(seed=0),
+                   runs=2, disabled=disabled,
+                   workflows=("viralrecon", "cageseq"))
+        for path in _PATHS:
+            cfg = engine.EngineConfig(seed=0, placement_path=path)
+            _assert_identical(
+                _run(engine, cluster, sched, cfg, runs=2, disabled=disabled,
+                     workflows=("viralrecon", "cageseq")), ref)
 
 
 @pytest.mark.parametrize("sched", ["fair", "sjfn"])
@@ -140,26 +148,49 @@ def test_equivalence_delayed_arrival(sched):
     """`submit(..., at=t)` with the delayed workflow arriving while the
     first still runs — the seed's per-event rescan promotes it mid-run and
     the vectorized engine's arrival heap must reproduce that exactly."""
-    cfg = engine.EngineConfig(seed=0)
-    ref_cfg = engine_ref.EngineConfig(seed=0)
     # (the seed engine cannot start idle, so the first workflow arrives at 0)
     for at in ((0.0, 30.0), (0.0, 90.0)):
-        a = _run(engine, "5;5;5", sched, cfg, runs=2,
-                 workflows=("alpha", "late"), at=at)
-        b = _run(engine_ref, "5;5;5", sched, ref_cfg, runs=2,
-                 workflows=("alpha", "late"), at=at)
-        _assert_identical(a, b)
-        # the arrival really landed mid-run, not on an idle engine
-        assert a[0][0] > at[1]
+        ref = _run(engine_ref, "5;5;5", sched, engine_ref.EngineConfig(seed=0),
+                   runs=2, workflows=("alpha", "late"), at=at)
+        for path in _PATHS:
+            cfg = engine.EngineConfig(seed=0, placement_path=path)
+            a = _run(engine, "5;5;5", sched, cfg, runs=2,
+                     workflows=("alpha", "late"), at=at)
+            _assert_identical(a, ref)
+            # the arrival really landed mid-run, not on an idle engine
+            assert a[0][0] > at[1]
+
+
+def test_equivalence_sizing_paths():
+    """Online-sizing runs can't be pinned to engine_ref (the frozen seed has
+    no sizing support): pin the array placement path against the dict path
+    instead — sized requests, OOM retries and subtree cancellations must be
+    bit-for-bit identical."""
+    from repro.core.sizing import SizingConfig
+    for cluster, sched, strategy in (("5;5;5", "tarema", "percentile"),
+                                     ("5;4;4;2", "fair", "escalation")):
+        outs = []
+        for path in _PATHS:
+            cfg = engine.EngineConfig(
+                seed=0, placement_path=path, quantile_method="linear",
+                sizing=SizingConfig(strategy=strategy))
+            outs.append(_run(engine, cluster, sched, cfg, runs=2,
+                             workflows=("viralrecon", "cageseq")))
+        _assert_identical(outs[0], outs[1])
 
 
 def test_equivalence_speculation():
     """History-warmed second run with a crippled node and speculation on:
-    the speculative-copy launch/kill path must match the seed exactly."""
-    cfg = engine.EngineConfig(seed=0, speculation=True, speculation_factor=1.5)
-    ref_cfg = engine_ref.EngineConfig(seed=0, speculation=True,
-                                      speculation_factor=1.5)
+    the speculative-copy launch/kill path (now driven by the cached p95
+    wake-time slot state) must match the seed exactly on both paths."""
     slow = make_scheduler("fillnodes", CLUSTERS["5;5;5"](), seed=3).nodes[0]
-    _assert_identical(
-        _run(engine, "5;5;5", "fillnodes", cfg, slow=slow, runs=2),
-        _run(engine_ref, "5;5;5", "fillnodes", ref_cfg, slow=slow, runs=2))
+    ref = _run(engine_ref, "5;5;5", "fillnodes",
+               engine_ref.EngineConfig(seed=0, speculation=True,
+                                       speculation_factor=1.5),
+               slow=slow, runs=2)
+    for path in _PATHS:
+        cfg = engine.EngineConfig(seed=0, speculation=True,
+                                  speculation_factor=1.5,
+                                  placement_path=path)
+        _assert_identical(
+            _run(engine, "5;5;5", "fillnodes", cfg, slow=slow, runs=2), ref)
