@@ -1,0 +1,236 @@
+"""Chaos benchmark: makespan degradation + recovery overhead vs fault rate.
+
+Sweeps all six schedulers on the paper's 5;5;5 cluster across escalating
+fault regimes (``repro.workflow.faults``): node churn (crash + rejoin),
+transient task failures with exponential-backoff retries, hung tasks with
+timeout reaping, and degraded-node episodes.  Per (workflow, scheduler,
+level): ``n_runs`` back-to-back runs share one TraceDB (the paper's
+repeated-execution protocol — history also warms the timeout p95s), and
+the concatenated assignment logs reduce with ``faults.fault_report``.
+
+Reported per combo: makespans, fault/recovery counters (crashes, rejoins,
+retries, timeouts, permanent failures), lost core-seconds, recovery
+overhead, backoff wait, and engine wall time.  The ``summary`` block gives
+each scheduler's makespan-degradation ratio vs the fault-free baseline at
+every level; ``snapshot_checks`` pauses one chaos run per scheduler
+mid-stream, pickles the engine, restores it, and asserts the resumed trace
+is bit-for-bit identical to the uninterrupted run (blob size + round-trip
+wall time recorded); ``acceptance`` requires every round-trip identical and
+every faulted run to reach a final state for all instances.
+
+Reading the numbers: makespan ratios are *survivor* makespans — at high
+fault rates an instance can exhaust its retry budget and take its whole
+downstream subtree with it (``fault_failures``/``cancelled`` columns), so
+a run can end *earlier* than the fault-free baseline while completing
+fewer tasks.  Degradation and completion must be read together.
+
+Emits ``benchmarks/results/BENCH_faults.json`` (committed trajectory, like
+``BENCH_engine.json``).
+
+    PYTHONPATH=src python -m benchmarks.faults_bench [--quick] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.core.monitor import TraceDB
+from repro.core.scheduler import TENANT_SCHEDULERS, make_scheduler
+from repro.workflow.cluster import cluster_555
+from repro.workflow.engine import Engine, EngineConfig
+from repro.workflow.faults import FaultConfig, fault_report
+from repro.workflow.nfcore import WORKFLOWS
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+OUT_PATH = os.path.join(RESULTS, "BENCH_faults.json")
+
+# escalating chaos regimes; "none" is the fault-free engine (faults=None)
+LEVELS: dict = {
+    "none": None,
+    "low": dict(crash_mttf_s=2000.0, task_fail_prob=0.02, hang_prob=0.01),
+    "medium": dict(crash_mttf_s=800.0, task_fail_prob=0.08, hang_prob=0.03),
+    "high": dict(crash_mttf_s=300.0, task_fail_prob=0.15, hang_prob=0.06),
+}
+
+
+def _fault_config(level: str, seed: int = 0):
+    knobs = LEVELS[level]
+    if knobs is None:
+        return None
+    return FaultConfig(seed=seed, mean_downtime_s=60.0,
+                       degrade_mtbf_s=1500.0, backoff_base_s=2.0,
+                       **knobs)
+
+
+def _engine(sched_name: str, db: TraceDB, run: int, level: str) -> Engine:
+    specs = cluster_555()
+    return Engine(specs, make_scheduler(sched_name, specs, seed=run * 7 + 3),
+                  db, EngineConfig(seed=run,
+                                   faults=_fault_config(level, seed=run)))
+
+
+def bench_combo(wf_name: str, sched_name: str, level: str,
+                n_runs: int) -> dict:
+    db = TraceDB()
+    log, makespans = [], []
+    stats: dict = {}
+    wall = 0.0
+    all_final = True
+    for run in range(n_runs):
+        eng = _engine(sched_name, db, run, level)
+        eng.submit(WORKFLOWS[wf_name](), run_id=run, seed=11 + run)
+        t0 = time.perf_counter()
+        res = eng.run()
+        wall += time.perf_counter() - t0
+        makespans.append(res["makespan"])
+        log.extend(eng.assignment_log)
+        for k, v in eng.fault_stats.items():
+            stats[k] = stats.get(k, 0) + v
+        all_final &= all(t.state in ("done", "killed")
+                         for t in eng.all_tasks.values())
+    rep = fault_report(log)
+    return {
+        "workflow": wf_name, "scheduler": sched_name, "level": level,
+        "n_runs": n_runs,
+        "makespans": [round(m, 2) for m in makespans],
+        "makespan_sum": round(sum(makespans), 2),
+        "tasks_completed": rep.n_completed,
+        "by_outcome": rep.by_outcome,
+        "lost_core_s": round(rep.lost_core_s, 1),
+        "recovery_overhead_s": round(rep.recovery_overhead_s, 1),
+        "fault_failures": rep.fault_failures,
+        "cancelled": rep.cancelled,
+        "crashes": stats.get("crashes", 0),
+        "rejoins": stats.get("rejoins", 0),
+        "retries": stats.get("retries", 0),
+        "timeouts": stats.get("timeouts", 0),
+        "backoff_wait_s": round(stats.get("backoff_wait_s", 0.0), 1),
+        "all_tasks_final": all_final,
+        "wall_s": round(wall, 3),
+    }
+
+
+def snapshot_check(wf_name: str, sched_name: str, level: str = "medium",
+                   until: float = 150.0) -> dict:
+    """Pause one chaos run mid-stream, snapshot, restore, resume both, and
+    compare against the uninterrupted run — all three must agree on every
+    float of the trace."""
+    def build():
+        eng = _engine(sched_name, TraceDB(), 0, level)
+        eng.submit(WORKFLOWS[wf_name](), run_id=0, seed=11)
+        return eng
+
+    def trace(eng, res):
+        return (res["makespan"], res["assignments"],
+                list(eng.assignment_log), dict(eng.fault_stats))
+
+    eng = build()
+    paused = eng.run(until=until)["paused"]
+    t0 = time.perf_counter()
+    blob = eng.snapshot()
+    twin = Engine.restore(blob)
+    roundtrip_s = time.perf_counter() - t0
+    a = trace(eng, eng.run())
+    b = trace(twin, twin.run())
+    ref = build()
+    c = trace(ref, ref.run())
+    identical = a == b == c
+    return {
+        "workflow": wf_name, "scheduler": sched_name, "level": level,
+        "paused_mid_run": bool(paused),
+        "blob_kb": len(blob) // 1024,
+        "snapshot_restore_s": round(roundtrip_s, 4),
+        "resumed_makespan": round(a[0], 2),
+        "trace_identical": identical,
+    }
+
+
+def _summarize(results: list[dict]) -> dict:
+    """Per-scheduler makespan degradation vs the fault-free baseline."""
+    agg: dict = {}
+    for r in results:
+        a = agg.setdefault((r["scheduler"], r["level"]),
+                           {"makespan": 0.0, "lost": 0.0, "overhead": 0.0})
+        a["makespan"] += r["makespan_sum"]
+        a["lost"] += r["lost_core_s"]
+        a["overhead"] += r["recovery_overhead_s"]
+    summary: dict = {}
+    for sched in TENANT_SCHEDULERS:
+        base = agg[(sched, "none")]["makespan"]
+        summary[sched] = {
+            lvl: {
+                "makespan_ratio_vs_none":
+                    round(agg[(sched, lvl)]["makespan"] / base, 4),
+                "lost_core_s": round(agg[(sched, lvl)]["lost"], 1),
+                "recovery_overhead_s":
+                    round(agg[(sched, lvl)]["overhead"], 1),
+            }
+            for lvl in LEVELS if (sched, lvl) in agg
+        }
+    return summary
+
+
+def main(quick: bool = False, out_path: str = OUT_PATH) -> dict:
+    print("faults_bench")
+    n_runs = 2 if quick else 4
+    workflows = ("viralrecon",) if quick else ("viralrecon", "cageseq")
+    results = []
+    for wf_name in workflows:
+        for sched_name in TENANT_SCHEDULERS:
+            for level in LEVELS:
+                rec = bench_combo(wf_name, sched_name, level, n_runs)
+                results.append(rec)
+                print(f"faults_bench/{wf_name}/{sched_name}/{level},"
+                      f"{rec['wall_s'] * 1e6:.0f},"
+                      f"makespan={rec['makespan_sum']:.0f}"
+                      f",lost={rec['lost_core_s']:.0f}"
+                      f",retries={rec['retries']}"
+                      f",crashes={rec['crashes']}")
+    checks = [snapshot_check(workflows[0], sched_name)
+              for sched_name in TENANT_SCHEDULERS]
+    for c in checks:
+        print(f"# snapshot {c['scheduler']}: blob={c['blob_kb']}KB "
+              f"roundtrip={c['snapshot_restore_s'] * 1e3:.1f}ms "
+              f"identical={c['trace_identical']}")
+    summary = _summarize(results)
+    acceptance = {
+        "snapshot_roundtrips_identical": all(c["trace_identical"]
+                                             for c in checks),
+        "snapshots_paused_mid_run": all(c["paused_mid_run"] for c in checks),
+        "all_runs_reached_final_state": all(r["all_tasks_final"]
+                                            for r in results),
+        "pass": all(c["trace_identical"] and c["paused_mid_run"]
+                    for c in checks)
+        and all(r["all_tasks_final"] for r in results),
+    }
+    print(f"# acceptance: snapshots identical="
+          f"{acceptance['snapshot_roundtrips_identical']} "
+          f"final-states={acceptance['all_runs_reached_final_state']} -> "
+          f"{'PASS' if acceptance['pass'] else 'FAIL'}")
+    out = {
+        "meta": {"quick": quick, "n_runs_per_combo": n_runs,
+                 "workflows": list(workflows), "cluster": "5;5;5",
+                 "levels": {k: v for k, v in LEVELS.items() if v},
+                 "generated_unix": int(time.time())},
+        "results": results,
+        "snapshot_checks": checks,
+        "summary": summary,
+        "acceptance": acceptance,
+    }
+    if os.path.dirname(out_path):
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"# wrote {out_path}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: 2 runs per combo, one workflow")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    main(quick=args.quick, out_path=args.out)

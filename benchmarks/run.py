@@ -23,10 +23,11 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (engine_bench, fig3_workflow_profiles,
-                            fig45_runtimes, fig67_usage, fig8_multiworkflow,
-                            kernel_bench, perf_variants, roofline,
-                            sizing_bench, table4_profiling, tenancy_bench)
+    from benchmarks import (engine_bench, faults_bench,
+                            fig3_workflow_profiles, fig45_runtimes,
+                            fig67_usage, fig8_multiworkflow, kernel_bench,
+                            perf_variants, roofline, sizing_bench,
+                            table4_profiling, tenancy_bench)
     suites = {
         "table4": table4_profiling.main,
         "fig3": fig3_workflow_profiles.main,
@@ -35,6 +36,7 @@ def main() -> None:
         "fig8": fig8_multiworkflow.main,
         "tenancy": tenancy_bench.main,
         "sizing": sizing_bench.main,
+        "faults": faults_bench.main,
         "roofline": roofline.main,
         "perf": perf_variants.main,
         "kernels": kernel_bench.main,

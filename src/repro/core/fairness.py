@@ -45,7 +45,13 @@ class AssignmentRecord(NamedTuple):
     undercounting tenants hit by failures.  ``outcome`` refines the flag:
     ``"done"``, ``"oom"`` (killed, will retry), ``"oom-fail"`` (retries
     exhausted, instance failed permanently), ``"node-failure"`` (requeued),
-    ``"speculative-loser"``.  ``mem_gb`` is the request the attempt ran
+    ``"speculative-loser"``.  The fault subsystem
+    (``repro.workflow.faults``) adds ``"node-crash"``, ``"task-failure"``
+    and ``"timeout"`` (killed, will retry after backoff), ``"fault-fail"``
+    (retry budget exhausted, failed permanently) and ``"cancelled"``
+    (zero-duration marker for a pending descendant of a permanent failure —
+    no node, no service, but the lost subtree stays attributable).
+    ``mem_gb`` is the request the attempt ran
     under (the *sized* request when ``EngineConfig.sizing`` is on) and
     ``used_mem_gb`` the sampled peak it reached, so allocated-minus-used
     wastage integrates directly off the log (``sizing.wastage_report``).
@@ -102,6 +108,9 @@ def core_seconds_by(records: list[AssignmentRecord],
     node name -> group key (profiling group index or machine tier); when
     omitted every node lands in a single ``"all"`` group.
     """
+    # cancelled descendants never held a node (node == "", zero duration):
+    # they carry no service, and indexing node_group with "" would blow up
+    records = [r for r in records if r.node]
     if not records:
         return [], [], np.zeros((0, 0), np.float64)
     tenants, t_code = _factorize([r.tenant for r in records])
@@ -147,11 +156,11 @@ def response_times(records: list[AssignmentRecord]) -> dict:
     completion the last task end.  Killed partial attempts
     (``completed=False``) count toward *service*, not completion, so they
     are skipped here — and a run containing a permanently-failed task
-    (``outcome="oom-fail"``: its downstream was cancelled) never completed
-    at all, so it is excluded entirely rather than scored as a fast
-    "success" at its last surviving task."""
+    (``outcome="oom-fail"`` or ``"fault-fail"``: its downstream was
+    cancelled) never completed at all, so it is excluded entirely rather
+    than scored as a fast "success" at its last surviving task."""
     failed = {(r.tenant, r.workflow, r.run_id) for r in records
-              if r.outcome == "oom-fail"}
+              if r.outcome in ("oom-fail", "fault-fail")}
     out: dict = {}
     for r in records:
         if not r.completed or (failed and

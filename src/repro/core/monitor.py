@@ -20,6 +20,13 @@ _DB_UIDS = itertools.count()     # distinguishes store generations (see uid)
 TASK_FEATURES = ("cpu", "mem", "io")     # %cores*100, GB resident, MB moved
 
 
+def _count_sum():
+    """Aggregate-cell factory for the materialized views.  Module-level —
+    a lambda here would make the store, and every engine snapshot that
+    contains one (``Engine.snapshot``), unpicklable."""
+    return [0, 0.0]
+
+
 @dataclasses.dataclass
 class TaskTrace:
     workflow: str
@@ -53,8 +60,8 @@ class TraceDB:
         # states of the same object
         self.uid = next(_DB_UIDS)
         # materialized aggregates: (wf, task, feature) -> [count, total]
-        self._agg = defaultdict(lambda: [0, 0.0])
-        self._runtime_agg = defaultdict(lambda: [0, 0.0])
+        self._agg = defaultdict(_count_sum)
+        self._runtime_agg = defaultdict(_count_sum)
         self._runtimes = defaultdict(list)          # kept sorted (insort)
         # per-(wf, task, feature) usage values, append-only on the hot path;
         # sorted lazily on first quantile read after a write (usage
@@ -71,6 +78,21 @@ class TraceDB:
         # into a dict hit (stale entries are overwritten in place, keeping
         # the memo bounded by the distinct key count).
         self._rq_cache: dict = {}
+
+    def __getstate__(self):
+        # epoch-keyed memo caches are pure reads rebuilt on demand: drop
+        # them from pickles so engine snapshots stay lean
+        d = self.__dict__.copy()
+        d["_rq_cache"] = {}
+        d["_usage_cache"] = {}
+        return d
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        # re-mint the generation id in the restoring process: external
+        # caches key on (uid, version), and a restored store must never
+        # collide with a live store that happened to draw the same uid
+        self.uid = next(_DB_UIDS)
 
     # -- writes ---------------------------------------------------------
     def add(self, trace: TaskTrace) -> None:

@@ -44,7 +44,16 @@ class Scheduler:
 
     def bind_cluster(self, na, nodes) -> None:
         """Bind the engine's node SoA (``na``) + SimNode view (``nodes``)
-        for the array fast path.  Called once per run; idempotent."""
+        for the array fast path.  Called once per run; idempotent.
+
+        Churn contract (``repro.workflow.faults``): the bound arrays span
+        *all* nodes for the run's lifetime — a crashed node stays in them
+        and liveness flows exclusively through the feasibility ``mask``
+        (``na.disabled`` zeroes its column), so node crash/rejoin cycles
+        need no re-bind and Tarema's group index arrays stay valid.  This
+        identity check also makes the bind a no-op after
+        ``Engine.restore``: the scheduler and engine are pickled as one
+        object graph, so ``self._na is na`` survives the round trip."""
         if getattr(self, "_na", None) is not na:
             self._na = na
             self._sim_nodes = nodes
@@ -53,6 +62,22 @@ class Scheduler:
     def _on_bind(self, na) -> None:
         """Hook for per-cluster derived arrays (rank permutations, speed
         columns, group index arrays)."""
+
+    def __getstate__(self):
+        """Snapshot support (``Engine.snapshot``): drop the pure memo
+        caches — labels, runtime estimates, group priorities and score
+        vectors are epoch-keyed pure reads rebuilt on demand, so shipping
+        them only bloats the blob.  Stateful fields (round-robin cursor,
+        WFQ virtual clocks, live allocations, tie-break RNGs) are kept:
+        they ARE the schedule."""
+        d = self.__dict__.copy()
+        for cache in ("_label_cache", "_priority_cache", "_scores_cache",
+                      "_est_cache"):
+            if cache in d:
+                d[cache] = {}
+        if "_est_key" in d:
+            d["_est_key"] = None
+        return d
 
     def order(self, queue, db: TraceDB):
         return queue

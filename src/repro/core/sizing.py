@@ -110,6 +110,14 @@ class MemorySizer:
         self.cfg = cfg
         self._cache: dict = {}
 
+    def __getstate__(self):
+        # snapshot leanness (Engine.snapshot): the memo is dead weight in a
+        # pickle anyway — it keys on db.uid, which TraceDB re-mints on
+        # restore, so no restored entry could ever hit
+        d = self.__dict__.copy()
+        d["_cache"] = {}
+        return d
+
     # -- strategy surface -------------------------------------------------
     def _predict_uncached(self, db: TraceDB, workflow: str, task_name: str,
                           base_req: float) -> float:

@@ -57,6 +57,10 @@ class TaskInstance:
     # online memory sizing (see repro.core.sizing; engine-maintained)
     attempt: int = 0                 # OOM retries consumed so far
     base_req_mem_gb: Optional[float] = None   # spec request before sizing
+    # fault-recovery budget (see repro.workflow.faults; engine-maintained,
+    # deliberately separate from the sizing `attempt` counter: an OOM
+    # escalation is progress, a crash/timeout retry is not)
+    fault_retries: int = 0           # fault-policy kills consumed so far
 
 
 def instantiate(spec: WorkflowSpec, run_id: int, seed: int,

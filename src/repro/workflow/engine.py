@@ -59,7 +59,25 @@ Fault-tolerance features (beyond-paper, used by the FT tests/examples):
 Every task attempt — completed or killed (node failure, OOM, speculative
 loser) — is appended to ``assignment_log``; killed attempts carry
 ``completed=False`` so fairness/wastage accounting sees the service that
-failures consumed (the seed logged only completions).
+failures consumed (the seed logged only completions).  Descendants
+cancelled by a permanent failure are logged too (``outcome="cancelled"``,
+zero-duration, no node).
+
+Robustness subsystem (beyond-paper, default off — see
+``repro.workflow.faults`` and ROADMAP "Robustness methodology"):
+  * ``EngineConfig.faults`` enables deterministic node churn
+    (crash/rejoin), degraded-node episodes, transient task failures,
+    hung-task inflation + timeout reaping, and per-task retry budgets with
+    exponential backoff.  Rejoining nodes re-enter placement incrementally
+    (feasibility-mask poke + rate_stale flag — no rebuilds);
+  * exogenous events (user failures, churn, backoff requeues) live in one
+    persistent heap processed at exact event boundaries, preserving the
+    seed's (time, node) failure ordering bit-for-bit;
+  * ``run(until=t)`` pauses at the first event boundary >= t and
+    ``snapshot()``/``restore()`` serialize the complete engine — node SoA,
+    queues, running slots, RNG/fault streams, TraceDB epoch — so a run
+    crash-recovers or warm-starts in another process with zero equivalence
+    drift (``tests/test_faults.py`` pins resumed == uninterrupted).
 
 Known-broken seed paths fixed here (unreachable by the equivalence suite):
 the idle-with-pending-failure branch indexed the failure *node* instead of
@@ -71,7 +89,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-import itertools
+import pickle
 import time
 from collections import defaultdict
 from typing import Optional
@@ -84,6 +102,7 @@ from repro.core.profiler import NodeSpec
 from repro.core.sizing import SizingConfig, make_sizer
 from repro.workflow.dag import (TaskInstance, WorkflowSpec, instantiate,
                                 stable_seed)
+from repro.workflow.faults import FaultConfig, FaultModel
 
 # Contention defaults: calibrated against the paper's Fig. 4/5 gaps
 # (see EXPERIMENTS.md §Calibration); overridable per EngineConfig.
@@ -95,6 +114,17 @@ SMT_PENALTY = 0.15           # CPU slowdown at full occupancy (vCPUs are SMT
 BW_EXP = 0.30                 # node bandwidth ~ (cores/8)**BW_EXP
 
 _REM_FEATURES = ("cpu", "mem", "io")   # column order of the remaining-work SoA
+
+# exogenous-event kinds; the value doubles as the heap priority, so
+# same-time events apply in this fixed order and — because the key type is
+# homogeneous per kind — heap tuples always compare cleanly.  Priority 0
+# for failures keeps the seed's (time, node) failure processing order.
+_EXO_FAIL, _EXO_REJOIN, _EXO_DEGRADE, _EXO_RESTORE, _EXO_REQUEUE = range(5)
+
+_FAULT_STAT_KEY = {"node-crash": "crash_kills", "task-failure": "task_failures",
+                   "timeout": "timeouts"}
+
+_SNAPSHOT_VERSION = 1
 
 
 class _NodeArrays:
@@ -236,6 +266,12 @@ class EngineConfig:
     # requires the fast path and raises if the scheduler can't serve it.
     # Both paths are bit-for-bit identical (tests/test_scheduler_protocol).
     placement_path: str = "auto"
+    # Fault injection + recovery policies (repro.workflow.faults): node
+    # churn (crash/rejoin), degraded-node episodes, transient task
+    # failures, hung-task timeouts, and retry budgets with exponential
+    # backoff.  None (default) disables the whole subsystem — bit-for-bit
+    # seed-equivalent.  Decided at engine construction.
+    faults: Optional[FaultConfig] = None
     seed: int = 0
     usage_noise: float = 0.03
     mem_beta: float = MEM_SHARE_BETA
@@ -272,13 +308,30 @@ class Engine:
         self.assignment_log: list[AssignmentRecord] = []
         self._failures: list[tuple] = []         # (time, node)
         self._spec_copies: dict[str, str] = {}   # primary id -> copy id
-        self._uid = itertools.count()
+        self._uid = 0      # plain int counters (itertools.count in the seed
+        # shape) so the whole engine pickles for snapshot()/restore()
         # online memory sizing (None == seed semantics, no OOM events)
         self._sizer = None if self.cfg.sizing is None \
             else make_sizer(self.cfg.sizing)
         self._refresh_mem_cap()
         self.sizing_stats = {"oom_events": 0, "oom_failures": 0,
                              "retry_overhead_s": 0.0}
+        # fault injection + recovery policies (None == seed semantics)
+        self._faults = None if self.cfg.faults is None \
+            else FaultModel(self.cfg.faults)
+        self._faults_armed = False
+        self.fault_stats = {"crashes": 0, "rejoins": 0, "degrades": 0,
+                            "crash_kills": 0, "task_failures": 0,
+                            "timeouts": 0, "retries": 0, "fault_failures": 0,
+                            "backoff_wait_s": 0.0}
+        # persistent exogenous-event heap: (time, kind, key, payload) for
+        # user failures, churn crash/rejoin, degrade/restore, and backoff
+        # requeues.  fail_node_at registrations are ingested at _prepare
+        # (cursor below), so resumed runs never re-ingest.
+        self._exo: list = []
+        self._failures_ingested = 0
+        self._user_failed: set = set()           # permanently failed by user
+        self._backoff_until: dict = {}           # instance -> requeue time
         # append-only running-task slots (SoA); slot order == start order ==
         # `running`-dict insertion order, which the argmin tie-break relies on
         self._slot_cap = 256
@@ -286,6 +339,9 @@ class Engine:
         self._slot_node = np.zeros(self._slot_cap, np.int64)
         self._slot_io = np.ones(self._slot_cap, np.float64)   # io_seq[node]
         self._slot_active = np.zeros(self._slot_cap, bool)
+        # wall-clock kill deadline per slot (+inf without a faults timeout
+        # policy or historic p95) — scanned with the next-finish argmin
+        self._slot_deadline = np.full(self._slot_cap, np.inf)
         self._slot_tasks: list[Optional[TaskInstance]] = [None] * self._slot_cap
         self._n_slots = 0
         self._n_active = 0
@@ -311,7 +367,7 @@ class Engine:
         self.phase_wall: dict = {}
         # dependency-counter scheduling state (built in _prepare at run())
         self._seq: dict[str, int] = {}           # instance -> submission order
-        self._seq_counter = itertools.count()
+        self._seq_next = 0
         self._deps_left: dict[str, int] = {}
         self._dependents: dict[str, list] = {}
         self._ready_batch: list[str] = []        # deps satisfied, not promoted
@@ -339,10 +395,23 @@ class Engine:
                 inst.instance = f"{prefix}/{inst.instance}"
                 inst.deps = tuple(f"{prefix}/{d}" for d in inst.deps)
             if inst.instance not in self._seq:
-                self._seq[inst.instance] = next(self._seq_counter)
+                self._seq[inst.instance] = self._seq_next
+                self._seq_next += 1
             self.all_tasks[inst.instance] = inst
 
     def fail_node_at(self, t: float, node: str):
+        """Register a *permanent* node failure at time ``t``.
+
+        Validated here, at registration — an unknown node or a duplicate
+        failure of an already-failed node raises immediately instead of
+        failing deep in the event loop mid-run.  A user-failed node never
+        rejoins, even under a churn fault model."""
+        if node not in self.nodes:
+            raise ValueError(f"fail_node_at: unknown node {node!r}")
+        if node in self._user_failed:
+            raise ValueError(f"fail_node_at: node {node!r} already has a "
+                             "registered failure")
+        self._user_failed.add(node)
         self._failures.append((t, node))
 
     # ----------------------------------------------------- vectorized rates
@@ -439,6 +508,8 @@ class Engine:
             self._slot_io = np.resize(self._slot_io, self._slot_cap)
             self._slot_start = np.resize(self._slot_start, self._slot_cap)
             self._spec_p95 = np.resize(self._spec_p95, self._slot_cap)
+            self._slot_deadline = np.resize(self._slot_deadline,
+                                            self._slot_cap)
             grown = np.zeros(self._slot_cap, bool)
             grown[:self._n_slots] = self._slot_active[:self._n_slots]
             self._slot_active = grown
@@ -472,6 +543,7 @@ class Engine:
         self._slot_io[:n] = self._slot_io[live]
         self._slot_start[:n] = self._slot_start[live]
         self._spec_p95[:n] = self._spec_p95[live]
+        self._slot_deadline[:n] = self._slot_deadline[live]
         self._slot_active[:n] = True
         self._slot_active[n:self._n_slots] = False
         tasks = [self._slot_tasks[i] for i in live]
@@ -514,12 +586,30 @@ class Engine:
             task._oom_doomed = True
         else:
             task._oom_doomed = False
+        # fault dooming (faults only): per-attempt transient-failure / hang
+        # draws are pure functions of (instance, fault_retries) — retries
+        # re-draw, and no engine RNG is consumed — plus the wall-clock kill
+        # deadline.  An OOM-doomed attempt dies at its OOM point first.
+        task._fault_doomed = False
+        deadline = np.inf
+        if self._faults is not None:
+            if not task._oom_doomed:
+                ffrac, hung = self._faults.attempt_faults(
+                    task.instance, task.fault_retries)
+                if ffrac is not None:
+                    frac, task._fault_doomed = ffrac, True
+                elif hung:
+                    # a hung attempt inflates its work: the timeout reaps it
+                    # (or speculation races it) instead of it finishing
+                    frac = self.cfg.faults.hang_factor
+            deadline = task.start_t + self._faults.timeout_for(self.db, task)
         s = self._alloc_slot()
         for j, f in enumerate(_REM_FEATURES):
             self._rem[s, j] = task.work[f] * frac
         self._slot_node[s] = i
         self._slot_io[s] = na.io_seq[i]
         self._slot_start[s] = task.start_t
+        self._slot_deadline[s] = deadline
         self._slot_active[s] = True
         self._slot_tasks[s] = task
         self._task_slot[task.instance] = s
@@ -651,6 +741,15 @@ class Engine:
                 if t.state == "pending":
                     t.state = "killed"
                     self._unfinished -= 1
+                    # log the cancellation (zero-duration, no node) so
+                    # fairness accounting can attribute the lost subtree —
+                    # silently-dropped descendants made failure-hit tenants
+                    # look merely *small* instead of failed
+                    self.assignment_log.append(AssignmentRecord(
+                        t.instance, t.name, t.workflow, t.run_id, t.tenant,
+                        "", self.t, self.t, t.req_cores, t.req_mem_gb,
+                        t.submit_t, completed=False, used_mem_gb=0.0,
+                        outcome="cancelled"))
                     stack.append(d)
 
     def _oom(self, task: TaskInstance):
@@ -689,19 +788,7 @@ class Engine:
             self._kill(task, requeue=False, reason="oom-fail")
             task.node = None          # dead primary must not pin a node
             self._cancel_downstream(task.instance)
-            # resolve any speculative pair: the copy was racing work that is
-            # now abandoned — left alone it would stay pinned away from the
-            # dead primary's node (possibly unplaceable forever) or complete
-            # into a subtree that was just cancelled
-            cid = self._spec_copies.pop(task.instance, None)
-            if cid is not None:
-                copy = self.all_tasks.get(cid)
-                if copy is not None:
-                    if copy.instance in self.running:
-                        self._kill(copy, requeue=False,
-                                   reason="speculative-loser")
-                    else:
-                        self._drop_queued(cid)
+            self._resolve_speculative_pair(task)
         else:
             self._kill(task, requeue=True, reason="oom")
             task.req_mem_gb = nxt            # escalated, pinned for the retry
@@ -709,6 +796,138 @@ class Engine:
             # WFQ scheduler charge the tenant again (unlike node-failure
             # requeues, which re-place already-charged work)
             task._wfq_charged = False
+
+    # --------------------------------------------- fault injection/recovery
+    def _resolve_speculative_pair(self, task: TaskInstance):
+        """A permanently-failed primary abandons its speculative copy: left
+        alone, the copy would stay pinned away from the dead primary's node
+        (possibly unplaceable forever) or complete into a subtree that was
+        just cancelled."""
+        cid = self._spec_copies.pop(task.instance, None)
+        if cid is None:
+            return
+        copy = self.all_tasks.get(cid)
+        if copy is not None:
+            if copy.instance in self.running:
+                self._kill(copy, requeue=False, reason="speculative-loser")
+            else:
+                self._drop_queued(cid)
+
+    def _push_exo(self, t: float, kind: int, key, payload=None):
+        heapq.heappush(self._exo, (t, kind, key, payload))
+
+    def _process_exo(self):
+        """Pop and apply the earliest exogenous event (the caller already
+        advanced the clock to its time)."""
+        _, kind, key, payload = heapq.heappop(self._exo)
+        if kind == _EXO_FAIL:
+            self._disable_node(key, churn=(payload == "churn"))
+        elif kind == _EXO_REJOIN:
+            self._rejoin_node(key)
+        elif kind == _EXO_DEGRADE:
+            self._degrade_node(key)
+        elif kind == _EXO_RESTORE:
+            self._restore_degrade(key, payload)
+        else:
+            self._requeue_backoff(payload)
+
+    def _fault_retry(self, task: TaskInstance, reason: str):
+        """Fault-policy kill: a crash victim, transient failure, or
+        timed-out attempt consumes one unit of the instance's retry budget
+        and re-queues only after exponential backoff; an exhausted budget
+        is a permanent failure (``outcome="fault-fail"``) that cancels the
+        downstream subtree, exactly like OOM exhaustion.  A speculative
+        copy is simply dropped — the primary it raced is still in flight.
+        Fault retries re-place already-charged work, so (like node-failure
+        requeues, unlike OOM escalations) they are not re-charged to the
+        WFQ virtual clock."""
+        fm = self._faults
+        self.fault_stats[_FAULT_STAT_KEY[reason]] += 1
+        if task.speculative_of:
+            self._kill(task, requeue=False, reason=reason)
+            if self._spec_copies.get(task.speculative_of) == task.instance:
+                del self._spec_copies[task.speculative_of]
+                if self._spec_on:
+                    # the primary lost its copy: straggler-eligible again
+                    s = self._task_slot.get(task.speculative_of)
+                    if s is not None:
+                        self._spec_p95[s] = self._spec_p95_for(
+                            self.all_tasks[task.speculative_of])
+            return
+        task.fault_retries += 1
+        if task.fault_retries > fm.cfg.max_task_retries:
+            self.fault_stats["fault_failures"] += 1
+            self._kill(task, requeue=False, reason="fault-fail")
+            task.node = None          # dead primary must not pin a node
+            self._cancel_downstream(task.instance)
+            self._resolve_speculative_pair(task)
+            return
+        self.fault_stats["retries"] += 1
+        self._kill(task, requeue=True, reason=reason)
+        delay = fm.backoff_delay(task.fault_retries)
+        if delay > 0.0:
+            # hold the requeued task back (it stays "ready" but leaves the
+            # queue) until its backoff expiry event re-appends it
+            self.fault_stats["backoff_wait_s"] += delay
+            self.queue.pop()          # _kill appended it; we hold it instead
+            self._backoff_until[task.instance] = self.t + delay
+            self._push_exo(self.t + delay, _EXO_REQUEUE,
+                           self._seq[task.instance], task.instance)
+
+    def _requeue_backoff(self, instance: str):
+        """Backoff expiry: re-queue the held retry — unless the instance was
+        cancelled while it waited (speculative-pair resolution), in which
+        case the expiry is a no-op."""
+        if self._backoff_until.pop(instance, None) is None:
+            return
+        task = self.all_tasks.get(instance)
+        if task is not None and task.state == "ready":
+            self.queue.append(task)
+
+    def _rejoin_node(self, name: str):
+        """A churn-crashed node comes back.  Re-entry is incremental: the
+        ``disabled`` property write pokes ``mask_dirty`` (repairing every
+        cached feasibility mask), ``rate_stale`` refreshes its service
+        rates, and ``_refresh_mem_cap`` lifts the sizing ceiling.  Bound
+        scheduler arrays span *all* nodes with liveness flowing through the
+        mask, so no scheduler-side rebuild exists to do (see
+        ``Scheduler.bind_cluster``)."""
+        if name in self._user_failed:
+            return    # a permanent user failure won while the node was down
+        self.fault_stats["rejoins"] += 1
+        self.nodes[name].disabled = False        # pokes mask_dirty
+        self._na.rate_stale[self._na.index[name]] = True
+        self._refresh_mem_cap()
+        nxt = self._faults.next_crash(name, self.t)
+        if nxt is not None:
+            self._push_exo(nxt, _EXO_FAIL, name, "churn")
+
+    def _degrade_node(self, name: str):
+        node = self.nodes[name]
+        factor, duration = self._faults.degrade_params(name)
+        self.fault_stats["degrades"] += 1
+        old = node.slow_factor
+        node.slow_factor = old * factor          # setter flags rate_stale
+        self._push_exo(self.t + duration, _EXO_RESTORE, name, old)
+
+    def _restore_degrade(self, name: str, old: float):
+        self.nodes[name].slow_factor = old
+        nxt = self._faults.next_degrade(name, self.t)
+        if nxt is not None:
+            self._push_exo(nxt, _EXO_DEGRADE, name)
+
+    def _arm_faults(self):
+        """Draw every node's first crash/degrade event (once per engine)."""
+        self._faults_armed = True
+        for name in self._na.names:
+            if self.nodes[name].disabled:
+                continue
+            nxt = self._faults.next_crash(name, self.t)
+            if nxt is not None:
+                self._push_exo(nxt, _EXO_FAIL, name, "churn")
+            nxt = self._faults.next_degrade(name, self.t)
+            if nxt is not None:
+                self._push_exo(nxt, _EXO_DEGRADE, name)
 
     def _prepare(self):
         """Build the dependency-counter state from the submitted task set.
@@ -724,6 +943,14 @@ class Engine:
         self._mask_cache.clear()      # masks never survive across runs
         self._na.mask_dirty.clear()
         self._refresh_mem_cap()       # nodes may have been disabled directly
+        # ingest newly-registered user failures into the exogenous-event
+        # heap (kind 0 + node key reproduce the seed's (time, node)
+        # processing order) and arm the fault model's churn/degrade clocks
+        for ft, fnode in self._failures[self._failures_ingested:]:
+            self._push_exo(ft, _EXO_FAIL, fnode, "user")
+        self._failures_ingested = len(self._failures)
+        if self._faults is not None and not self._faults_armed:
+            self._arm_faults()
         self._deps_left = {}
         self._dependents = defaultdict(list)
         self._ready_batch = []
@@ -943,10 +1170,12 @@ class Engine:
         for s in np.flatnonzero(fire):
             task = self._slot_tasks[s]
             copy = dataclasses.replace(
-                task, instance=f"{task.instance}~spec{next(self._uid)}",
+                task, instance=f"{task.instance}~spec{self._uid}",
                 state="ready", node=None, remaining=None,
                 speculative_of=task.instance)
-            self._seq[copy.instance] = next(self._seq_counter)
+            self._uid += 1
+            self._seq[copy.instance] = self._seq_next
+            self._seq_next += 1
             self.all_tasks[copy.instance] = copy
             self._deps_left[copy.instance] = 0
             self._unfinished += 1
@@ -963,6 +1192,11 @@ class Engine:
         t = self.all_tasks.get(instance)
         if t is None or t.state != "ready":
             return False
+        if self._backoff_until.pop(instance, None) is not None:
+            # held in retry backoff, not queued: its expiry event no-ops
+            t.state = "killed"
+            self._unfinished -= 1
+            return True
         try:
             self.queue.remove(t)
         except ValueError:      # not queued after all: leave it untouched
@@ -971,19 +1205,59 @@ class Engine:
         self._unfinished -= 1
         return True
 
-    def _disable_node(self, name: str):
+    def _disable_node(self, name: str, churn: bool = False):
         node = self.nodes[name]
+        if churn:
+            # fault-model crash: victims consume retry budget + backoff,
+            # and the node rejoins after a drawn downtime
+            if node.disabled:
+                return   # user failure already took it down permanently
+            na, fm = self._na, self._faults
+            if len(na.names) - int(na.disabled.sum()) <= fm.cfg.min_live_nodes:
+                # below the survivor floor: skip this crash but keep the
+                # node's churn clock running
+                nxt = fm.next_crash(name, self.t)
+                if nxt is not None:
+                    self._push_exo(nxt, _EXO_FAIL, name, "churn")
+                return
+            self.fault_stats["crashes"] += 1
+            node.disabled = True
+            self._refresh_mem_cap()
+            # victims in *slot* (start) order, NOT set order: a restored
+            # engine's unpickled sets can iterate differently from the
+            # original's (hash-table history), and kill order decides
+            # requeue order — snapshot bit-equivalence needs it stable.
+            # (The user-failure path below deliberately keeps the seed's
+            # set iteration: it is pinned bit-for-bit against engine_ref,
+            # which walks the same identically-built set.)
+            i = na.index[name]
+            n = self._n_slots
+            for s in np.flatnonzero(self._slot_active[:n]
+                                    & (self._slot_node[:n] == i)):
+                victim = self._slot_tasks[s]
+                if victim is not None:   # freed by a sibling's pair resolution
+                    self._fault_retry(victim, "node-crash")
+            self._push_exo(self.t + fm.downtime(name), _EXO_REJOIN, name)
+            return
         node.disabled = True
         self._refresh_mem_cap()
         for tid in list(node.running):
             self._kill(self.running[tid], requeue=True)
 
     # ------------------------------------------------------------------ run
-    def run(self, max_t: float = 10_000_000.0) -> dict:
+    def run(self, max_t: float = 10_000_000.0,
+            until: Optional[float] = None) -> dict:
+        """Run to completion — or, with ``until``, pause at the first event
+        boundary at or past that time (``result["paused"]`` is True when
+        work remains).  A paused engine resumes with another ``run()``
+        call, possibly after a ``snapshot()``/``restore()`` round-trip in a
+        different process; the pause never splits a floating-point task
+        advance, so the resumed trace is bit-for-bit identical to an
+        uninterrupted run (pinned by tests/test_faults.py)."""
         with np.errstate(divide="ignore"):
-            return self._run_loop(max_t)
+            return self._run_loop(max_t, until)
 
-    def _run_loop(self, max_t: float) -> dict:
+    def _run_loop(self, max_t: float, until: Optional[float] = None) -> dict:
         # one blanket divide-only errstate for the whole loop (zero-rate
         # divisions in the time-left/advance math are intentional) instead
         # of a context manager entered per event; *invalid* warnings stay
@@ -993,9 +1267,11 @@ class Engine:
         t_run0 = time.perf_counter()
         self._sched_wall = self._monitor_wall = 0.0   # per-run attribution
         self._prepare()
-        self._failures.sort()
-        fail_i = 0
+        paused = False
         while True:
+            if until is not None and self.t >= until and self._unfinished > 0:
+                paused = True
+                break
             self._promote_ready()
             t0 = time.perf_counter()
             self._schedule()
@@ -1005,20 +1281,20 @@ class Engine:
                 if self._unfinished == 0:
                     break
                 # nothing running but work remains: jump to the next
-                # exogenous event (node failure or delayed submission)
-                next_fail = self._failures[fail_i][0] \
-                    if fail_i < len(self._failures) else None
+                # exogenous event (node failure/rejoin, backoff requeue, or
+                # delayed submission)
+                next_exo = self._exo[0][0] if self._exo else None
                 next_arr = self._arrivals[0][0] if self._arrivals else None
-                if next_fail is None and next_arr is None:
+                if next_exo is None and next_arr is None:
                     raise RuntimeError("tasks stuck with no runnable node")
                 if next_arr is not None and \
-                        (next_fail is None or next_arr <= next_fail):
+                        (next_exo is None or next_arr <= next_exo):
                     self.t = max(self.t, next_arr)
                 else:
-                    ft, fnode = self._failures[fail_i]
-                    fail_i += 1
-                    self.t = max(self.t, ft)
-                    self._disable_node(fnode)
+                    self.t = max(self.t, next_exo)
+                    self._process_exo()
+                    if self._faults is not None and self.t > max_t:
+                        raise RuntimeError("simulation exceeded max_t")
                 continue
             # next event: earliest finishing task, next failure, or the next
             # speculation check (without it the loop can jump straight past
@@ -1049,16 +1325,33 @@ class Engine:
                     wakes = wakes[(wakes > 0) & (wakes < dt)]
                     if wakes.size:
                         finishing, dt = None, wakes.min()
+            reap = -1
+            if self._faults is not None and self._faults.has_timeouts:
+                # earliest wall-clock kill deadline among running attempts
+                # competes with finish/wake events; +inf deadlines (no
+                # policy match or no history yet) never fire
+                dl = np.where(act, self._slot_deadline[:n], np.inf)
+                jd = int(np.argmin(dl))
+                ddl = dl[jd] - self.t
+                if ddl < dt:
+                    finishing, dt, reap = None, max(ddl, 0.0), jd
             t_next = self.t + dt
-            if fail_i < len(self._failures) and self._failures[fail_i][0] < t_next:
-                ft, fnode = self._failures[fail_i]
-                self._advance_full(max(ft - self.t, 0.0), n, tl)
-                self.t = ft
-                fail_i += 1
-                self._disable_node(fnode)
+            if self._exo and self._exo[0][0] < t_next:
+                et = self._exo[0][0]
+                self._advance_full(max(et - self.t, 0.0), n, tl)
+                self.t = et
+                self._process_exo()
+                if self._faults is not None and self.t > max_t:
+                    raise RuntimeError("simulation exceeded max_t")
                 continue
             self._advance_full(dt, n, tl)
             self.t = float(t_next)
+            if reap >= 0:              # timeout: reap the hung attempt
+                self._fault_retry(self._slot_tasks[reap], "timeout")
+                self._maybe_compact()
+                if self.t > max_t:
+                    raise RuntimeError("simulation exceeded max_t")
+                continue
             if finishing is None:      # speculation wake-up, nothing finished
                 continue
             task = finishing
@@ -1066,6 +1359,14 @@ class Engine:
                 # the "finish" of an under-sized attempt is its OOM point:
                 # kill + escalate + retry instead of completing
                 self._oom(task)
+                self._maybe_compact()
+                if self.t > max_t:
+                    raise RuntimeError("simulation exceeded max_t")
+                continue
+            if getattr(task, "_fault_doomed", False):
+                # the "finish" of a doomed attempt is its transient-failure
+                # point: consume a retry + backoff instead of completing
+                self._fault_retry(task, "task-failure")
                 self._maybe_compact()
                 if self.t > max_t:
                     raise RuntimeError("simulation exceeded max_t")
@@ -1104,4 +1405,27 @@ class Engine:
             "monitor_s": self._monitor_wall,
             "event_s": max(total - self._sched_wall - self._monitor_wall, 0.0),
         }
-        return {"makespan": self._max_end, "assignments": self.assignments}
+        return {"makespan": self._max_end, "assignments": self.assignments,
+                "paused": paused}
+
+    # ------------------------------------------------- snapshot / restore
+    def snapshot(self) -> bytes:
+        """Serialize the complete engine state to bytes: node SoA, queues,
+        running slots, engine + scheduler RNG state, fault-model streams,
+        WFQ virtual clocks, and the TraceDB epoch.  Call between ``run()``
+        calls (e.g. paused via ``run(until=t)``) — never mid-event.
+        ``restore`` rebuilds an engine in any process that resumes
+        bit-for-bit identically to the uninterrupted run; pure memo caches
+        (scheduler labels/quantiles) are dropped on the way out and rebuilt
+        on demand, so they cost no blob space and no determinism."""
+        return pickle.dumps({"version": _SNAPSHOT_VERSION, "engine": self},
+                            protocol=pickle.HIGHEST_PROTOCOL)
+
+    @staticmethod
+    def restore(blob: bytes) -> "Engine":
+        state = pickle.loads(blob)
+        if not isinstance(state, dict) \
+                or state.get("version") != _SNAPSHOT_VERSION \
+                or not isinstance(state.get("engine"), Engine):
+            raise ValueError("not a compatible engine snapshot")
+        return state["engine"]

@@ -21,6 +21,7 @@ from repro.core.scheduler import TENANT_SCHEDULERS, make_scheduler
 from repro.core.sizing import STRATEGIES, SizingConfig
 from repro.workflow.dag import AbstractTask, WorkflowSpec
 from repro.workflow.engine import Engine, EngineConfig
+from repro.workflow.faults import (FAULT_KILL_OUTCOMES, FaultConfig)
 
 
 class CheckedEngine(Engine):
@@ -248,6 +249,83 @@ def test_engine_invariants_sized(seed):
     for t in eng.all_tasks.values():
         assert t.state in ("done", "killed"), (t.instance, t.state)
     assert res["makespan"] >= 0.0
+
+
+@given(st.integers(0, 10_000_000))
+@settings(max_examples=10, deadline=None)
+def test_engine_invariants_faulted(seed):
+    """Safety invariants under fault injection: random churn, transient
+    failures, hangs and timeout reaping on top of random DAGs x clusters x
+    schedulers.  CheckedEngine asserts per-transition that reservations
+    stay conserved and nothing is ever placed on a crashed (disabled)
+    node; post-hoc, every instance reaches a final state (no deadlock
+    through backoff holds or rejoin cycles), all resources come back, and
+    the fault accounting reconciles exactly with the assignment log."""
+    rng = np.random.default_rng(seed)
+    specs = random_cluster(rng)
+    fc = FaultConfig(seed=seed,
+                     crash_mttf_s=float(rng.uniform(80.0, 400.0)),
+                     mean_downtime_s=float(rng.uniform(10.0, 60.0)),
+                     min_live_nodes=1,
+                     degrade_mtbf_s=float(rng.uniform(100.0, 500.0)),
+                     task_fail_prob=float(rng.uniform(0.0, 0.25)),
+                     hang_prob=float(rng.uniform(0.0, 0.1)),
+                     timeout_factor=float(rng.uniform(3.0, 10.0)),
+                     max_task_retries=int(rng.integers(1, 5)),
+                     backoff_base_s=float(rng.uniform(0.5, 6.0)))
+    sched = TENANT_SCHEDULERS[seed % len(TENANT_SCHEDULERS)]
+    cfg = EngineConfig(seed=seed, faults=fc,
+                       speculation=bool(rng.integers(0, 2)),
+                       speculation_factor=1.5,
+                       cancel_stale_speculative=True)
+    eng = CheckedEngine(specs, make_scheduler(sched, specs, seed=seed),
+                        TraceDB(), cfg)
+    eng.submit(random_workflow(rng, "wfa"), run_id=0, seed=seed,
+               tenant="ta", prefix="a")
+    eng.submit(random_workflow(rng, "wfb"), run_id=0, seed=seed + 1,
+               at=float(rng.uniform(0.0, 60.0)), tenant="tb", prefix="b")
+    res = eng.run()
+
+    # no deadlock: every instance reached a final state, resources restored
+    for t in eng.all_tasks.values():
+        assert t.state in ("done", "killed"), (t.instance, t.state)
+    for node in eng.nodes.values():
+        assert node.free_cores == node.spec.cores
+        assert abs(node.free_mem - node.spec.mem_gb) < 1e-6
+        assert not node.running
+
+    # log outcomes well-formed; cancelled markers are node-less and flat
+    stats = eng.fault_stats
+    n_kills = n_spec_kills = n_fail = 0
+    for rec in eng.assignment_log:
+        if rec.outcome in FAULT_KILL_OUTCOMES:
+            # fault-killed speculative copies are dropped, not retried:
+            # they show up in the log but never consume retry budget
+            if "~spec" in rec.instance:
+                n_spec_kills += 1
+            else:
+                n_kills += 1
+        elif rec.outcome == "fault-fail":
+            n_fail += 1
+        if rec.outcome == "cancelled":
+            assert rec.node == "" and rec.start == rec.end
+            assert not rec.completed
+        else:
+            assert rec.node in eng.nodes, rec
+            assert rec.start <= rec.end <= res["makespan"] + 1e-9, rec
+
+    # accounting reconciles: every retried fault kill is a logged attempt,
+    # every budget exhaustion a fault-fail record
+    assert stats["retries"] == n_kills
+    assert stats["fault_failures"] == n_fail
+    assert stats["crash_kills"] + stats["task_failures"] \
+        + stats["timeouts"] == n_kills + n_spec_kills + n_fail
+    assert stats["rejoins"] <= stats["crashes"]
+    if stats["retries"] == 0:
+        assert stats["backoff_wait_s"] == 0.0
+    # fault-failed instances stopped at their retry budget
+    for t in eng.all_tasks.values():
+        assert t.fault_retries <= fc.max_task_retries + 1
 
 
 @given(st.integers(0, 10_000_000))

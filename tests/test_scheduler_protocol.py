@@ -29,6 +29,7 @@ from repro.core.sizing import STRATEGIES, SizingConfig
 from repro.workflow.cluster import CLUSTERS
 from repro.workflow.dag import AbstractTask, WorkflowSpec
 from repro.workflow.engine import Engine, EngineConfig
+from repro.workflow.faults import FaultConfig
 from repro.workflow.nfcore import WORKFLOWS
 
 
@@ -68,12 +69,37 @@ def test_paths_identical_paper_clusters(cluster, sched):
     _assert_paths_identical(build)
 
 
+@pytest.mark.parametrize("sched", ["fair", "tarema"])
+def test_paths_identical_under_churn(sched):
+    """Deterministic chaos parity: with node crash/rejoin cycles, hangs,
+    timeouts and backoff retries all firing, the array path's incremental
+    mask repair must still match the dict path event for event."""
+    fc = FaultConfig(seed=11, crash_mttf_s=200.0, mean_downtime_s=30.0,
+                     task_fail_prob=0.1, hang_prob=0.05,
+                     backoff_base_s=2.0)
+
+    def build(path):
+        specs = CLUSTERS["5;5;5"]()
+        eng = Engine(specs, make_scheduler(sched, specs, seed=3), TraceDB(),
+                     EngineConfig(seed=0, placement_path=path, faults=fc))
+        eng.submit(WORKFLOWS["viralrecon"](), run_id=0, seed=11)
+        eng.submit(WORKFLOWS["cageseq"](), run_id=0, seed=13)
+        return eng
+    _assert_paths_identical(build)
+    # the case pins nothing unless faults actually fired
+    eng = build("array")
+    eng.run()
+    assert eng.fault_stats["crashes"] > 0 or \
+        eng.fault_stats["task_failures"] > 0
+
+
 @given(st.integers(0, 10_000_000))
 @settings(max_examples=12, deadline=None)
 def test_paths_identical_random(seed):
     """Random cluster x DAGs x scheduler, with the engine's hard cases
     mixed in: disabled nodes, a node failure, speculation (pair
-    exclusions), delayed arrivals, and online memory sizing."""
+    exclusions), delayed arrivals, online memory sizing, and fault
+    injection (node churn + transient failures + retry backoff)."""
     def build(path):
         rng = np.random.default_rng(seed)
         specs = random_cluster(rng)
@@ -82,11 +108,19 @@ def test_paths_identical_random(seed):
         if rng.random() < 0.35:
             sizing = SizingConfig(strategy=STRATEGIES[seed % len(STRATEGIES)],
                                   max_retries=int(rng.integers(1, 4)))
+        faults = None
+        if rng.random() < 0.4:   # chaos: placement parity must survive it
+            faults = FaultConfig(
+                seed=seed,
+                crash_mttf_s=float(rng.uniform(100.0, 500.0)),
+                mean_downtime_s=float(rng.uniform(10.0, 60.0)),
+                task_fail_prob=float(rng.uniform(0.0, 0.2)),
+                backoff_base_s=float(rng.uniform(1.0, 8.0)))
         cfg = EngineConfig(seed=seed, placement_path=path,
                            speculation=bool(rng.integers(0, 2)),
                            speculation_factor=1.5,
                            cancel_stale_speculative=bool(rng.integers(0, 2)),
-                           sizing=sizing,
+                           sizing=sizing, faults=faults,
                            quantile_method="linear" if sizing else "seed")
         disabled = None
         if len(specs) > 3 and rng.random() < 0.4:
