@@ -23,7 +23,7 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (engine_bench, faults_bench,
+    from benchmarks import (engine_bench, ensemble_bench, faults_bench,
                             fig3_workflow_profiles, fig45_runtimes,
                             fig67_usage, fig8_multiworkflow, kernel_bench,
                             perf_variants, roofline, sizing_bench,
@@ -41,6 +41,7 @@ def main() -> None:
         "perf": perf_variants.main,
         "kernels": kernel_bench.main,
         "engine": engine_bench.main,
+        "ensemble": ensemble_bench.main,
     }
     os.makedirs(RESULTS, exist_ok=True)
     all_out = {}

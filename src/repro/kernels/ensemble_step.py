@@ -1,0 +1,130 @@
+"""Fused building blocks of the batched ensemble simulator's scan step.
+
+These are the hot inner expressions of ``repro.workflow.ensemble`` — the
+per-event node-rate / time-left / advance math and the masked first-min
+argmin reductions — kept here so they can be unit-tested against their
+numpy twins in ``engine.py`` / ``allocation.py`` and reused by future
+fleet-scale consumers (ROADMAP items 2/5 want exactly these primitives).
+
+Everything is plain ``jax.numpy``: on this CPU-only container a Pallas
+lowering would force interpret mode (slower than XLA:CPU's fused
+elementwise loops), and the shapes involved — [R, N] node panels and
+[R, T] task panels — are bandwidth-, not compute-, bound.  Bit-for-bit
+equivalence with the numpy engine is part of the contract: every
+expression mirrors its engine twin operand-for-operand (same multiply /
+divide nesting), so under ``jax.experimental.enable_x64`` the scan's f64
+results are identical to the sequential engine's.
+
+All helpers are batched over a leading replica axis R and are intended to
+be called from inside an already-jitted ``lax.scan`` step (they are not
+individually jitted here).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Large sentinel for int32 "not a candidate" keys.  Room is left above it
+# (2**30 < 2**31 - 1) so masked keys can never collide with real ones and
+# an argmin over an all-masked row still returns a safely readable index.
+INT_SENTINEL = jnp.int32(1 << 30)
+
+
+def node_rates(free_cores, mem_denom, cpu_base, mem_base,
+               cores, smt_penalty):
+    """Per-node (cpu, mem) service rates, batched: all inputs [R, N] or [N].
+
+    Mirrors ``Engine._node_rates`` operand-for-operand:
+
+        occ  = 1 - free_cores / cores
+        smt  = 1 - smt_penalty * max(0, occ - 0.5) / 0.5
+        cpu  = (cpu_speed * slow) * smt
+        mem  = ((mem_static * slow) * bw_scale) / mem_denom
+
+    ``cpu_base = cpu_speed * slow`` and ``mem_base = (mem_static * slow) *
+    bw_scale`` are hoisted by the caller (static while ``slow`` is the
+    constant 1.0 — the ensemble does not support straggler injection), so
+    the per-step work is exactly the engine's stale-node recompute.
+
+    ``mem_denom`` is the engine's ``min(1 + beta * max(0, n_running - 1),
+    cap)`` gathered from a *host-precomputed* table indexed by the node's
+    running count.  It must not be computed inline with jnp: XLA:CPU
+    contracts ``1.0 + beta * k`` into an FMA whose single rounding differs
+    from numpy's two-rounding result for some k, silently breaking the
+    bit-for-bit contract.  (The remaining expressions here are
+    contraction-safe: divisions and subtractions cannot be fused into
+    FMAs, and ``cpu_base * smt`` is a lone multiply.)
+    """
+    occ = 1.0 - free_cores / cores
+    smt = 1.0 - smt_penalty * jnp.maximum(0.0, occ - 0.5) / 0.5
+    cpu = cpu_base * smt
+    mem = mem_base / mem_denom
+    return cpu, mem
+
+
+def time_left(rem_cpu, rem_mem, rem_io, cpu, mem, io_eff):
+    """Time-to-finish per slot: rem [R, N, C], rates [R, N] broadcast.
+
+    ``io_eff`` is the node's ``io_seq / io_denom`` (the engine divides the
+    per-slot gathered ``io_seq`` by the scalar cluster denominator; with
+    node-major slots the division happens per node — same float op).
+    Dead slots have zeroed remaining work and yield 0.0, exactly like the
+    engine's kept-dense slot range; callers mask them out of the argmin.
+    """
+    return (rem_cpu / cpu[:, :, None] + rem_mem / mem[:, :, None]
+            + rem_io / io_eff[:, :, None])
+
+
+def advance(rem_cpu, rem_mem, rem_io, tl, dt):
+    """One engine ``_advance_full``: rem *= (1 - min(dt/tl, 1)) over every
+    slot (active or dead).  ``dt`` is [R] (broadcast over slots); a dt of
+    zero is the engine's early-return — callers wrap with
+    ``jnp.where(dt > 0, advanced, rem)`` to reproduce it bit-for-bit.
+    Dead slots: rem == 0 and tl == 0, so dt/0 == +inf saturates frac to 1
+    and 0 * 0 stays 0 (dt > 0 lanes never see 0/0)."""
+    frac = jnp.minimum(dt[:, None, None] / tl, 1.0)
+    scale = (1.0 - frac)
+    return rem_cpu * scale, rem_mem * scale, rem_io * scale
+
+
+def first_min_by_order(values, order, active):
+    """(min value, index of the *first started* slot achieving it).
+
+    The engine's next-event pick is ``argmin`` over the dense slot array,
+    whose order is start order (append-ordered, compaction-stable) — so
+    among tied minima the earliest-started slot wins.  Here slots live in
+    node-major layout, so the tie-break is made explicit: among slots whose
+    time-left equals the masked minimum, take the smallest start ordinal.
+
+    values, order, active: [R, S] (order int32, unique per active slot).
+    Returns (m [R] f64, idx [R] int32 — flat slot index).
+    """
+    masked = jnp.where(active, values, jnp.inf)
+    m = jnp.min(masked, axis=1)
+    tie = jnp.where(active & (masked == m[:, None]), order, INT_SENTINEL)
+    return m, jnp.argmin(tie, axis=1).astype(jnp.int32)
+
+
+def blocked_argmin_i32(key, block: int):
+    """First-min argmin over int32 keys [R, T], T a multiple of ``block``.
+
+    A flat ``jnp.argmin`` over a wide int row is a scalar loop on XLA:CPU;
+    reshaping to [R, T//block, block] and reducing block minima first is
+    ~2.5x faster at the bench's T = 2048 and returns the identical first
+    minimum (the first block holding the global min, then the first slot
+    inside it).  Keys use INT_SENTINEL for "not a candidate"; callers
+    check ``key[argmin] < INT_SENTINEL`` for emptiness.
+    """
+    R, T = key.shape
+    k3 = key.reshape(R, T // block, block)
+    bmin = jnp.min(k3, axis=2)
+    b = jnp.argmin(bmin, axis=1)
+    rows = jnp.take_along_axis(k3, b[:, None, None], axis=1)[:, 0, :]
+    within = jnp.argmin(rows, axis=1)
+    return (b * block + within).astype(jnp.int32)
+
+
+def node_load(free_cores, free_mem, cores, mem_gb):
+    """``allocation.node_loads`` batched: 0.5 * ((1 - free_cores/cores)
+    + (1 - free_mem/mem)) — operand-for-operand, so masked argmins over it
+    are bit-for-bit the engine's lexsort pick under ordered tie keys."""
+    return 0.5 * ((1.0 - free_cores / cores) + (1.0 - free_mem / mem_gb))

@@ -1293,8 +1293,13 @@ class Engine:
                 else:
                     self.t = max(self.t, next_exo)
                     self._process_exo()
-                    if self._faults is not None and self.t > max_t:
-                        raise RuntimeError("simulation exceeded max_t")
+                # uniform runaway guard: *every* time advance checks max_t
+                # (the arrival jump used to continue unchecked, and the
+                # exogenous checks were gated on a fault model being
+                # present — a plain tenancy stream stretching past max_t
+                # never raised until its first finish)
+                if self.t > max_t:
+                    raise RuntimeError("simulation exceeded max_t")
                 continue
             # next event: earliest finishing task, next failure, or the next
             # speculation check (without it the loop can jump straight past
@@ -1341,7 +1346,7 @@ class Engine:
                 self._advance_full(max(et - self.t, 0.0), n, tl)
                 self.t = et
                 self._process_exo()
-                if self._faults is not None and self.t > max_t:
+                if self.t > max_t:
                     raise RuntimeError("simulation exceeded max_t")
                 continue
             self._advance_full(dt, n, tl)

@@ -203,8 +203,9 @@ class FaultModel:
             return math.inf
         p95 = db.runtime_quantile(task.workflow, task.name, 0.95,
                                   method="linear")
-        if not p95:
-            return math.inf
+        if p95 is None:            # no history at all -> can't bound the run;
+            return math.inf        # a genuine 0.0 p95 (instant tasks) must
+        # still cap the attempt at the floor, not disable the reaper
         return max(self.cfg.timeout_floor_s, self.cfg.timeout_factor * p95)
 
     def backoff_delay(self, retries: int) -> float:

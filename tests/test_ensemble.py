@@ -1,0 +1,167 @@
+"""The jitted ensemble scan must reproduce the numpy Engine bit-for-bit.
+
+Property suite: random DAGs x random heterogeneous clusters x every
+supported scheduler, with fixed pre-drawn jitter — full traces (node
+assignment, start/end floats, finish order, makespans) compared exactly,
+under the RNG-stream mapping documented in ``repro.workflow.ensemble``
+(ordered tie-breaks in the oracle).  Unsupported engine features must
+refuse loudly at build time, never silently diverge.
+
+Runs through the ``tests/_hyp.py`` shim (deterministic fallback when
+hypothesis isn't installed).
+"""
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.core.monitor import TraceDB
+from repro.core.profiler import NodeSpec
+from repro.core.scheduler import make_scheduler
+from repro.core.sizing import SizingConfig
+from repro.workflow.cluster import cluster_555, cluster_5442
+from repro.workflow.dag import AbstractTask, WorkflowSpec
+from repro.workflow.engine import Engine, EngineConfig
+from repro.workflow.ensemble import (Submission, assert_equivalent,
+                                     oracle_ensemble, run_ensemble)
+from repro.workflow.faults import FaultConfig
+from repro.workflow.nfcore import WORKFLOWS
+
+_SCHEDS = ("fair", "sjfn", "fillnodes", "roundrobin")
+
+
+def random_workflow(rng, name: str) -> WorkflowSpec:
+    """Layered random DAG; demands stay within random_cluster's smallest
+    node (4 cores / 16 GB) so every task is placeable somewhere."""
+    n_stages = int(rng.integers(2, 5))
+    tasks = []
+    for s in range(n_stages):
+        deps = ()
+        if tasks:
+            n_deps = int(rng.integers(1, len(tasks) + 1))
+            deps = tuple(t.name for t in
+                         rng.choice(tasks, size=n_deps, replace=False))
+        tasks.append(AbstractTask(
+            f"{name}_s{s}", int(rng.integers(1, 6)),
+            {"cpu": float(rng.uniform(50, 2000)),
+             "mem": float(rng.uniform(10, 300)),
+             "io": float(rng.uniform(1, 50))},
+            peak_mem_gb=float(rng.uniform(0.5, 4.0)),
+            deps=deps,
+            req_cores=int(rng.integers(1, 5)),
+            req_mem_gb=float(rng.uniform(1.0, 8.0))))
+    return WorkflowSpec(name, tasks)
+
+
+def random_cluster(rng) -> list[NodeSpec]:
+    n = int(rng.integers(3, 9))
+    return [NodeSpec(f"r-m{int(rng.integers(0, 3))}-{i}", f"m{i % 3}",
+                     cores=int(rng.choice([4, 8, 16])),
+                     mem_gb=float(rng.choice([16.0, 32.0, 64.0])),
+                     cpu_speed=float(rng.uniform(300, 600)),
+                     mem_bw=float(rng.uniform(12000, 20000)),
+                     app_factor=float(rng.uniform(0.7, 1.05)))
+            for i in range(n)]
+
+
+@given(st.integers(0, 10_000_000))
+@settings(max_examples=8, deadline=None)
+def test_scan_matches_engine_on_random_cases(seed):
+    rng = np.random.default_rng(seed)
+    specs = random_cluster(rng)
+    sched_name = _SCHEDS[seed % len(_SCHEDS)]
+    subs = [Submission(random_workflow(rng, "wfa"), seed=seed, prefix="a")]
+    if rng.random() < 0.5:   # delayed-arrival second stream
+        subs.append(Submission(random_workflow(rng, "wfb"), seed=seed + 1,
+                               at=float(rng.uniform(0.0, 60.0)), prefix="b"))
+    res = run_ensemble(specs, subs, make_scheduler(sched_name, specs, seed=0),
+                       n_replicas=2, seed_stride=7)
+    ref = oracle_ensemble(specs, subs,
+                          make_scheduler(sched_name, specs, seed=0),
+                          n_replicas=2, seed_stride=7)
+    assert_equivalent(res, ref)
+
+
+def test_scan_matches_engine_nfcore_multisubmission():
+    """Fixed paper-cluster case: sjfn + two delayed submissions."""
+    specs = cluster_555()
+    subs = [Submission(WORKFLOWS["cageseq"](), run_id=0, seed=7, prefix="a"),
+            Submission(WORKFLOWS["cageseq"](), run_id=1, seed=8, at=25.0,
+                       prefix="b")]
+    res = run_ensemble(specs, subs, make_scheduler("sjfn", specs, seed=0),
+                       n_replicas=2)
+    ref = oracle_ensemble(specs, subs, make_scheduler("sjfn", specs, seed=0),
+                          n_replicas=2)
+    assert_equivalent(res, ref)
+    assert (res.makespan > 0).all()
+    # replicas draw different jitter -> distinct trajectories
+    assert res.makespan[0] != res.makespan[1]
+
+
+def test_scan_replica_seeds_match_individual_engine_runs():
+    """Replica r == a stock engine run submitted with seed + r*stride."""
+    specs = cluster_5442()
+    wf = WORKFLOWS["mag"]()
+    res = run_ensemble(specs, [Submission(wf, seed=3)],
+                       make_scheduler("fillnodes", specs, seed=0),
+                       n_replicas=3, seed_stride=10)
+    for r in range(3):
+        eng = Engine(specs, make_scheduler("fillnodes", specs, seed=0),
+                     TraceDB(), EngineConfig())
+        eng.submit(wf, run_id=0, seed=3 + 10 * r)
+        out = eng.run()
+        assert out["makespan"] == res.makespan[r]
+
+
+# ------------------------------------------------------- loud refusals
+def _toy():
+    return WorkflowSpec("toy", [AbstractTask(
+        "t0", 2, {"cpu": 100.0, "mem": 10.0, "io": 1.0}, 1.0)])
+
+
+def _specs():
+    return [NodeSpec("n0", "m", 4, 16.0, cpu_speed=400.0, mem_bw=15000.0,
+                     app_factor=1.0)]
+
+
+@pytest.mark.parametrize("cfg", [
+    EngineConfig(speculation=True),
+    EngineConfig(sizing=SizingConfig()),
+    EngineConfig(faults=FaultConfig()),
+])
+def test_unsupported_engine_features_refuse_loudly(cfg):
+    specs = _specs()
+    with pytest.raises(NotImplementedError):
+        run_ensemble(specs, [Submission(_toy())],
+                     make_scheduler("fair", specs, seed=0), 1, config=cfg)
+
+
+def test_unsupported_scheduler_refuses_loudly():
+    specs = cluster_555()
+    with pytest.raises(NotImplementedError, match="TaremaScheduler"):
+        run_ensemble(specs, [Submission(_toy())],
+                     make_scheduler("tarema", specs, seed=0), 1)
+
+
+def test_duplicate_instance_ids_refuse_loudly():
+    specs = _specs()
+    subs = [Submission(_toy(), seed=1), Submission(_toy(), seed=2)]
+    with pytest.raises(NotImplementedError, match="prefix"):
+        run_ensemble(specs, subs, make_scheduler("fair", specs, seed=0), 1)
+
+
+def test_zero_core_requests_refuse_loudly():
+    specs = _specs()
+    wf = WorkflowSpec("z", [AbstractTask(
+        "t0", 1, {"cpu": 100.0, "mem": 10.0, "io": 1.0}, 1.0, req_cores=0)])
+    with pytest.raises(NotImplementedError, match="req_cores"):
+        run_ensemble(specs, [Submission(wf)],
+                     make_scheduler("fair", specs, seed=0), 1)
+
+
+def test_degenerate_arguments_raise_value_error():
+    specs = _specs()
+    sched = make_scheduler("fair", specs, seed=0)
+    with pytest.raises(ValueError):
+        run_ensemble(specs, [], sched, 1)
+    with pytest.raises(ValueError):
+        run_ensemble(specs, [Submission(_toy())], sched, 0)

@@ -402,3 +402,29 @@ def test_oom_fail_cancelled_descendants_logged():
     for r in cancelled:
         assert r.node == "" and not r.completed and r.start == r.end
         assert r.tenant == "default" and r.workflow == "wfoom"
+
+
+def test_timeout_with_zero_runtime_history_uses_floor():
+    """Regression: ``timeout_for`` used ``if not p95`` — a genuine historic
+    p95 of 0.0 (instant tasks) was conflated with *missing* history and
+    silently disabled the reaper.  Zero-runtime history must still cap the
+    attempt at ``timeout_floor_s``; only ``None`` (never observed) may
+    yield +inf."""
+    from repro.core.monitor import TaskTrace
+    from repro.workflow.dag import TaskInstance
+
+    db = TraceDB()
+    for i in range(3):
+        db.add(TaskTrace("wf", "instant", f"instant[{i}]", 0, "n0", 0.0,
+                         {"cpu": 0.0, "mem": 0.0, "io": 0.0}))
+    assert db.runtime_quantile("wf", "instant", 0.95, method="linear") == 0.0
+    fm = FaultModel(FaultConfig(seed=0, timeout_factor=2.0,
+                                timeout_floor_s=7.5))
+    task = TaskInstance(workflow="wf", run_id=0, name="instant",
+                        instance="instant[9]", work={}, peak_mem_gb=0.1,
+                        req_cores=1, req_mem_gb=0.1, deps=())
+    assert fm.timeout_for(db, task) == 7.5          # floor, not +inf
+    fresh = TaskInstance(workflow="wf", run_id=0, name="never-seen",
+                         instance="never-seen[0]", work={}, peak_mem_gb=0.1,
+                         req_cores=1, req_mem_gb=0.1, deps=())
+    assert fm.timeout_for(db, fresh) == np.inf      # None stays unbounded

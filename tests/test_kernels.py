@@ -117,3 +117,75 @@ def test_kmeans_lloyd_step_multiblock_accumulation():
     assert int(jnp.sum(lab1 != lab4)) == 0
     np.testing.assert_allclose(np.asarray(c1), np.asarray(c4), rtol=0)
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s4), atol=1e-4)
+
+
+# ------------------------------------------------- ensemble scan helpers
+# numpy mirrors of the engine expressions these kernels must match
+# bit-for-bit (f64 under enable_x64 inside the ensemble scan; here the
+# comparison runs in f64 numpy on both sides).
+
+
+def test_ensemble_node_rates_matches_engine_math():
+    from jax.experimental import enable_x64
+    from repro.kernels import ensemble_step as ks
+    rng = np.random.default_rng(0)
+    R, N = 4, 7
+    cores = rng.choice([4.0, 6.0, 8.0, 16.0], N)
+    free = np.floor(rng.uniform(0, cores, (R, N)))
+    nrun = rng.integers(0, 5, (R, N))
+    cpu_base = rng.uniform(300, 600, N)
+    mem_base = rng.uniform(1e4, 2e4, N)
+    beta, cap, smt = 0.35, 2.5, 0.25
+    mem_denom = np.minimum(1.0 + beta * np.maximum(0.0, nrun - 1.0), cap)
+    occ = 1.0 - free / cores
+    want_cpu = cpu_base * (1.0 - smt * np.maximum(0.0, occ - 0.5) / 0.5)
+    want_mem = mem_base / mem_denom
+    with enable_x64():
+        cpu, mem = ks.node_rates(jnp.asarray(free), jnp.asarray(mem_denom),
+                                 jnp.asarray(cpu_base), jnp.asarray(mem_base),
+                                 jnp.asarray(cores), smt)
+        np.testing.assert_array_equal(np.asarray(cpu), want_cpu)
+        np.testing.assert_array_equal(np.asarray(mem), want_mem)
+
+
+def test_ensemble_time_left_and_advance_match_numpy():
+    from jax.experimental import enable_x64
+    from repro.kernels import ensemble_step as ks
+    rng = np.random.default_rng(1)
+    R, N, C = 3, 4, 2
+    rem = [rng.uniform(0, 100, (R, N, C)) for _ in range(3)]
+    rates = [rng.uniform(1, 10, (R, N)) for _ in range(3)]
+    want_tl = sum(r / s[:, :, None] for r, s in zip(rem, rates))
+    dt = rng.uniform(0, 5, R)
+    scale = 1.0 - np.minimum(dt[:, None, None] / want_tl, 1.0)
+    with enable_x64():
+        tl = ks.time_left(*[jnp.asarray(r) for r in rem],
+                          *[jnp.asarray(s) for s in rates])
+        np.testing.assert_array_equal(np.asarray(tl), want_tl)
+        adv = ks.advance(*[jnp.asarray(r) for r in rem], jnp.asarray(want_tl),
+                         jnp.asarray(dt))
+        for got, r in zip(adv, rem):
+            np.testing.assert_array_equal(np.asarray(got), r * scale)
+
+
+def test_ensemble_first_min_breaks_ties_by_start_order():
+    from repro.kernels import ensemble_step as ks
+    vals = jnp.asarray([[5.0, 2.0, 9.0, 2.0, 2.0]])
+    order = jnp.asarray([[0, 7, 1, 3, 9]], dtype=jnp.int32)
+    active = jnp.asarray([[True, True, True, True, False]])
+    m, idx = ks.first_min_by_order(vals, order, active)
+    assert float(m[0]) == 2.0
+    assert int(idx[0]) == 3          # order 3 < 7; inactive order-9 ignored
+    # all-inactive row: min is +inf, index readable (not an error)
+    m2, _ = ks.first_min_by_order(vals, order, jnp.zeros_like(active))
+    assert np.isinf(float(m2[0]))
+
+
+def test_ensemble_blocked_argmin_matches_flat_argmin():
+    from repro.kernels import ensemble_step as ks
+    rng = np.random.default_rng(2)
+    R, T, B = 5, 256, 64
+    key = rng.integers(0, 50, (R, T)).astype(np.int32)  # dense ties
+    key[0, :] = int(ks.INT_SENTINEL)                    # empty row
+    got = ks.blocked_argmin_i32(jnp.asarray(key), B)
+    np.testing.assert_array_equal(np.asarray(got), key.argmin(axis=1))

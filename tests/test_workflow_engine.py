@@ -203,3 +203,32 @@ def test_instantiate_deps_consistent():
     # per-sample chaining: equal-width stages depend on exactly one parent
     aligns = [t for t in insts if t.name == "align"]
     assert all(len(t.deps) == 1 for t in aligns)
+
+
+def test_max_t_guard_covers_delayed_arrival_jump():
+    """Regression: the idle-engine jump to a far-future ``submit(at=)``
+    used to ``continue`` with no ``max_t`` check (and the exogenous-branch
+    checks were gated on a fault model being present), so a runaway stream
+    only raised after its first *finish* — long past the cap, with work
+    already placed.  The guard must now fire on the time advance itself,
+    before anything starts."""
+    specs = cluster_555()
+    eng = Engine(specs, make_scheduler("fair", specs, seed=0), TraceDB(),
+                 EngineConfig(seed=0))
+    eng.submit(_wf(1), run_id=0, seed=0, at=1e9)
+    with pytest.raises(RuntimeError, match="max_t"):
+        eng.run(max_t=1000.0)
+    # the raise happened on the arrival jump, not after a post-cap finish
+    assert eng.assignments == []
+    assert not eng.running
+
+
+def test_max_t_guard_still_admits_in_bound_arrivals():
+    """Arrivals inside the cap run exactly as before the guard fix."""
+    specs = cluster_555()
+    eng = Engine(specs, make_scheduler("fair", specs, seed=0), TraceDB(),
+                 EngineConfig(seed=0))
+    eng.submit(_wf(1), run_id=0, seed=0, at=50.0)
+    res = eng.run(max_t=1e7)
+    assert all(t.state == "done" for t in eng.all_tasks.values())
+    assert res["makespan"] > 50.0
