@@ -1,0 +1,220 @@
+"""Learned completion-time placement benchmark: predictive vs tarema/sjfn.
+
+Per (cluster, workflow, scheduler): ``n_rounds`` back-to-back contended
+runs (three staggered instances of the workflow per round) share one
+TraceDB; the predictive scheduler additionally carries one
+``IncrementalPredictor`` across the rounds, so the runtime/interference
+model warms exactly like the paper's repeated-execution protocol.  The
+``EngineConfig.prediction`` hook is armed for *every* scheduler — tarema
+and sjfn record passively through an engine-owned model — so the
+prediction-error columns are comparable across schedulers.
+
+Reported per combo: per-round makespans (round 0 = cold model, last
+round = warm), concatenated MAPE overall / warm (cell-level hits) /
+cold (fallback levels), fallback-level mix, the fitted interference
+slope theta, and MAPE per task-label x node-group cell.  The
+``summary`` block compares the predictive scheduler's warm-round
+makespan against tarema and sjfn per (cluster, workflow), and
+``acceptance`` gates on the ISSUE criteria: warm MAPE < cold MAPE, and
+predictive <= tarema on at least one contended paper-cluster workload.
+
+A seed-equivalence gate runs first: a tarema engine with the hook armed
+must produce the bit-for-bit identical trace to one with
+``prediction=None`` (the hook is observation-only for non-predictive
+schedulers).  The bench refuses to emit results if that gate fails.
+
+Emits ``benchmarks/results/BENCH_prediction.json`` (committed
+trajectory, like ``BENCH_sizing.json``).
+
+    PYTHONPATH=src python -m benchmarks.prediction_bench [--quick] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.core.monitor import TraceDB
+from repro.core.prediction import (PredictionConfig, error_report,
+                                   make_predictor)
+from repro.core.scheduler import make_scheduler
+from repro.workflow.cluster import CLUSTERS
+from repro.workflow.engine import Engine, EngineConfig
+from repro.workflow.nfcore import WORKFLOWS
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+OUT_PATH = os.path.join(RESULTS, "BENCH_prediction.json")
+
+BENCH_SCHEDULERS = ("tarema", "sjfn", "predictive")
+# three staggered instances per round -> real co-residency, so the
+# interference term has contended samples to fit
+_ARRIVALS = (0.0, 30.0, 60.0)
+_SCHED_SEED = 3   # fixed across rounds: node-group ids depend on it
+
+
+def _round(specs, sched, db, round_idx: int, wf_name: str) -> dict:
+    eng = Engine(specs, sched, db,
+                 EngineConfig(seed=round_idx, prediction=PredictionConfig(),
+                              quantile_method="linear"))
+    for j, at in enumerate(_ARRIVALS):
+        eng.submit(WORKFLOWS[wf_name](), run_id=round_idx * len(_ARRIVALS) + j,
+                   seed=11 + round_idx * 31 + j, at=at, prefix=f"r{round_idx}j{j}")
+    t0 = time.perf_counter()
+    res = eng.run()
+    return {"makespan": res["makespan"], "wall": time.perf_counter() - t0,
+            "log": list(eng.prediction_log)}
+
+
+def bench_combo(cluster: str, wf_name: str, sched_name: str,
+                n_rounds: int) -> dict:
+    specs = CLUSTERS[cluster]()
+    db = TraceDB()
+    # the predictive scheduler owns its model and keeps it across rounds;
+    # fresh per-round schedulers share it (same pattern as the shared db)
+    model = make_predictor(PredictionConfig()) \
+        if sched_name == "predictive" else None
+    makespans, log = [], []
+    wall = 0.0
+    for r in range(n_rounds):
+        kw = {"model": model} if model is not None else {}
+        sched = make_scheduler(sched_name, specs, seed=_SCHED_SEED, **kw)
+        out = _round(specs, sched, db, r, wf_name)
+        makespans.append(out["makespan"])
+        log.extend(out["log"])
+        wall += out["wall"]
+    rep = error_report(log)
+    return {
+        "cluster": cluster, "workflow": wf_name, "scheduler": sched_name,
+        "n_rounds": n_rounds, "instances_per_round": len(_ARRIVALS),
+        "makespans": [round(m, 2) for m in makespans],
+        "makespan_cold": round(makespans[0], 2),
+        "makespan_warm": round(makespans[-1], 2),
+        "n_records": rep["n_records"],
+        "mape": rep["mape"], "mape_warm": rep["mape_warm"],
+        "mape_cold": rep["mape_cold"],
+        "n_warm": rep["n_warm"], "n_cold": rep["n_cold"],
+        "n_cold_none": rep["n_cold_none"],
+        "theta": round(model.theta(), 4) if model is not None else None,
+        "per_cell_mape": {k: v["mape"] for k, v in rep["per_cell"].items()},
+        "wall_s": round(wall, 3),
+    }
+
+
+def seed_equivalence_gate() -> dict:
+    """Armed hook + non-predictive scheduler == prediction=None, exactly."""
+    def run(pred):
+        specs = CLUSTERS["5;5;5"]()
+        eng = Engine(specs, make_scheduler("tarema", specs, seed=_SCHED_SEED),
+                     TraceDB(), EngineConfig(seed=0, prediction=pred))
+        eng.submit(WORKFLOWS["eager"](), run_id=0, seed=7)
+        res = eng.run()
+        return res["makespan"], res["assignments"], list(eng.assignment_log)
+    base, armed = run(None), run(PredictionConfig())
+    ok = base == armed
+    return {"pass": ok,
+            "detail": "tarema trace with hook armed is bit-for-bit the "
+                      "prediction=None trace"}
+
+
+def _summarize(results: list[dict]) -> tuple[dict, dict]:
+    by = {(r["cluster"], r["workflow"], r["scheduler"]): r for r in results}
+    clusters = sorted({r["cluster"] for r in results})
+    wfs = sorted({r["workflow"] for r in results})
+    summary = {}
+    pred_beats_tarema = 0
+    for c in clusters:
+        for wf in wfs:
+            p, t, s = (by[(c, wf, n)] for n in ("predictive", "tarema",
+                                                "sjfn"))
+            beats = p["makespan_warm"] <= t["makespan_warm"]
+            pred_beats_tarema += beats
+            summary[f"{c}/{wf}"] = {
+                "predictive_makespan_warm": p["makespan_warm"],
+                "tarema_makespan_warm": t["makespan_warm"],
+                "sjfn_makespan_warm": s["makespan_warm"],
+                "predictive_vs_tarema": round(
+                    p["makespan_warm"] / t["makespan_warm"], 4),
+                "predictive_mape_warm": p["mape_warm"],
+                "predictive_mape_cold": p["mape_cold"],
+                "predictive_beats_tarema": beats,
+            }
+    # MAPE gate on the predictive rows only (the model actually steering)
+    pred_rows = [r for r in results if r["scheduler"] == "predictive"
+                 and r["mape_warm"] is not None and r["mape_cold"] is not None]
+    warm_lt_cold = sum(r["mape_warm"] < r["mape_cold"] for r in pred_rows)
+    acceptance = {
+        "warm_mape_lt_cold": {
+            "combos": f"{warm_lt_cold}/{len(pred_rows)}",
+            "pass": len(pred_rows) > 0 and warm_lt_cold > len(pred_rows) // 2,
+        },
+        "predictive_beats_tarema_somewhere": {
+            "combos": f"{pred_beats_tarema}/{len(clusters) * len(wfs)}",
+            "pass": pred_beats_tarema >= 1,
+        },
+    }
+    acceptance["pass"] = all(v["pass"] for v in acceptance.values())
+    return summary, acceptance
+
+
+def main(quick: bool = False, out_path: str = OUT_PATH) -> dict:
+    print("prediction_bench")
+    if quick and out_path == OUT_PATH:
+        # quick mode writes its own file so a CI/local repro can never
+        # clobber the committed full-run trajectory (engine_bench pattern)
+        out_path = os.path.join(RESULTS, "BENCH_prediction.quick.json")
+    gate = seed_equivalence_gate()
+    print(f"# seed-equivalence gate: {'PASS' if gate['pass'] else 'FAIL'}")
+    if not gate["pass"]:
+        raise AssertionError("prediction hook broke seed equivalence: "
+                             + gate["detail"])
+    n_rounds = 2 if quick else 4
+    wfs = ("eager", "chipseq") if quick else tuple(WORKFLOWS)
+    results = []
+    for cluster in sorted(CLUSTERS):
+        for wf_name in wfs:
+            for sched_name in BENCH_SCHEDULERS:
+                rec = bench_combo(cluster, wf_name, sched_name, n_rounds)
+                results.append(rec)
+                print(f"prediction_bench/{cluster}/{wf_name}/{sched_name},"
+                      f"{rec['wall_s'] * 1e6:.0f},"
+                      f"warm={rec['makespan_warm']:.0f}"
+                      f",mape={rec['mape'] if rec['mape'] is None else round(rec['mape'], 3)}"
+                      f",warm_mape={rec['mape_warm'] if rec['mape_warm'] is None else round(rec['mape_warm'], 3)}")
+    summary, acceptance = _summarize(results)
+    for k, s in summary.items():
+        print(f"# {k}: predictive x{s['predictive_vs_tarema']:.3f} vs tarema "
+              f"({'<=' if s['predictive_beats_tarema'] else '>'}), "
+              f"mape {s['predictive_mape_cold']:.3f} cold -> "
+              f"{s['predictive_mape_warm']:.3f} warm"
+              if s["predictive_mape_warm"] is not None else f"# {k}: cold-only")
+    print(f"# acceptance: warm<cold "
+          f"{acceptance['warm_mape_lt_cold']['combos']}, beats-tarema "
+          f"{acceptance['predictive_beats_tarema_somewhere']['combos']} -> "
+          f"{'PASS' if acceptance['pass'] else 'FAIL'}")
+    out = {
+        "meta": {"quick": quick, "n_rounds": n_rounds,
+                 "instances_per_round": len(_ARRIVALS),
+                 "arrivals_s": list(_ARRIVALS),
+                 "schedulers": list(BENCH_SCHEDULERS),
+                 "generated_unix": int(time.time())},
+        "seed_equivalence": gate,
+        "results": results,
+        "summary": summary,
+        "acceptance": acceptance,
+    }
+    if os.path.dirname(out_path):
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"# wrote {out_path}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: 2 rounds, 2 workflows")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    main(quick=args.quick, out_path=args.out)

@@ -26,8 +26,8 @@ def main() -> None:
     from benchmarks import (engine_bench, ensemble_bench, faults_bench,
                             fig3_workflow_profiles, fig45_runtimes,
                             fig67_usage, fig8_multiworkflow, kernel_bench,
-                            perf_variants, roofline, sizing_bench,
-                            table4_profiling, tenancy_bench)
+                            perf_variants, prediction_bench, roofline,
+                            sizing_bench, table4_profiling, tenancy_bench)
     suites = {
         "table4": table4_profiling.main,
         "fig3": fig3_workflow_profiles.main,
@@ -36,6 +36,7 @@ def main() -> None:
         "fig8": fig8_multiworkflow.main,
         "tenancy": tenancy_bench.main,
         "sizing": sizing_bench.main,
+        "prediction": prediction_bench.main,
         "faults": faults_bench.main,
         "roofline": roofline.main,
         "perf": perf_variants.main,

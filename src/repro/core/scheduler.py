@@ -31,6 +31,7 @@ import numpy as np
 from repro.core import allocation, labeling
 from repro.core.clustering import choose_k
 from repro.core.monitor import TraceDB
+from repro.core.prediction import PredictionConfig, make_predictor
 from repro.core.profiler import NodeProfile, profile_cluster_synthetic
 
 
@@ -453,6 +454,72 @@ class WeightedTaremaScheduler(TaremaScheduler):
         return i
 
 
+class PredictiveScheduler(_ProfiledScheduler):
+    """Completion-time placement over the learned runtime/interference
+    model (``repro.core.prediction``, Reshi-style §beyond-paper).
+
+    Each placement scores every feasible node with the model's predicted
+    completion seconds — hierarchical (task, node-group) base runtime
+    times the fitted co-residency slowdown factor for the node's current
+    occupancy — and takes the minimum; the node-ready term of the
+    completion time is zero for every candidate, because the engine only
+    offers nodes that can host the task *now*.  Ties break by load, then
+    randomly, exactly like SJFN.  A completely cold model (no completed
+    observation anywhere) falls back to fair least-loaded placement, the
+    same unknown-task rule Tarema uses.
+
+    The model only learns when the engine feeds it completions, so this
+    scheduler requires ``EngineConfig.prediction``; the engine refuses a
+    model-carrying scheduler without the hook rather than silently
+    running fair-forever.  Pass ``model=`` to share a warm model across
+    runs (benchmarks warm it exactly like they share a ``TraceDB``).
+    """
+    name = "predictive"
+    supports_array_placement = True
+
+    def __init__(self, specs, seed: int = 0,
+                 config: PredictionConfig | None = None, model=None):
+        super().__init__(specs, seed)
+        self.rng = np.random.default_rng(seed + 4)
+        self.model = model if model is not None \
+            else make_predictor(config or PredictionConfig())
+
+    def select_node(self, task, nodes, feasible, db):
+        cands = [n for n, ok in feasible.items() if ok]
+        if not cands:
+            return None
+        groups = [self.info.node_group[n] for n in cands]
+        running = [len(nodes[n].running) for n in cands]
+        scores = self.model.placement_scores(task.workflow, task.name,
+                                             groups, running)
+        if scores is None:
+            return min(cands,
+                       key=lambda n: (nodes[n].load(), self.rng.random()))
+        idx = min(range(len(cands)),
+                  key=lambda i: (scores[i], nodes[cands[i]].load(),
+                                 self.rng.random()))
+        return cands[idx]
+
+    def _on_bind(self, na):
+        self._group_arr = np.array([self.info.node_group[n] for n in na.names],
+                                   np.int64)
+
+    def select_node_idx(self, task, mask, db):
+        cand = np.flatnonzero(mask)
+        if cand.size == 0:
+            return None
+        na = self._na
+        scores = self.model.placement_scores(
+            task.workflow, task.name, self._group_arr[cand],
+            na.n_running[cand])
+        if scores is None:
+            return allocation.least_loaded_idx(na, cand, self.rng)
+        loads = allocation.node_loads(na, cand)
+        ties = self.rng.random(cand.size)
+        order = np.lexsort((ties, loads, scores))
+        return int(cand[order[0]])
+
+
 def make_scheduler(name: str, specs, seed: int = 0, **kw) -> Scheduler:
     names = [s.name for s in specs]
     if name == "roundrobin":
@@ -467,6 +534,8 @@ def make_scheduler(name: str, specs, seed: int = 0, **kw) -> Scheduler:
         return TaremaScheduler(specs, seed)
     if name == "weighted-tarema":
         return WeightedTaremaScheduler(specs, seed, **kw)
+    if name == "predictive":
+        return PredictiveScheduler(specs, seed, **kw)
     raise ValueError(name)
 
 
@@ -474,3 +543,7 @@ SCHEDULERS = ("roundrobin", "fair", "fillnodes", "sjfn", "tarema")
 BASELINES = ("roundrobin", "fair", "fillnodes")
 # the paper's five plus the multi-tenant extension (tenancy_bench sweeps these)
 TENANT_SCHEDULERS = SCHEDULERS + ("weighted-tarema",)
+# everything, including the prediction-gated scheduler — test sweeps use
+# this; benches keep the tuples above because "predictive" additionally
+# needs EngineConfig.prediction armed
+ALL_SCHEDULERS = TENANT_SCHEDULERS + ("predictive",)

@@ -98,6 +98,8 @@ import numpy as np
 
 from repro.core.fairness import AssignmentRecord
 from repro.core.monitor import TaskTrace, TraceDB
+from repro.core.prediction import (PredictionConfig, PredictionRecord,
+                                   make_predictor)
 from repro.core.profiler import NodeSpec
 from repro.core.sizing import SizingConfig, make_sizer
 from repro.workflow.dag import (TaskInstance, WorkflowSpec, instantiate,
@@ -266,6 +268,14 @@ class EngineConfig:
     # requires the fast path and raises if the scheduler can't serve it.
     # Both paths are bit-for-bit identical (tests/test_scheduler_protocol).
     placement_path: str = "auto"
+    # Online runtime/interference prediction (repro.core.prediction): the
+    # engine records a completion-time prediction for every placement
+    # (so prediction error is measurable for any scheduler) and feeds
+    # completed attempts back into the model — which is what makes
+    # PredictiveScheduler learn.  None (default) disables the whole
+    # subsystem — bit-for-bit seed-equivalent — and the engine refuses a
+    # model-carrying scheduler rather than letting it run cold forever.
+    prediction: Optional[PredictionConfig] = None
     # Fault injection + recovery policies (repro.workflow.faults): node
     # churn (crash/rejoin), degraded-node episodes, transient task
     # failures, hung-task timeouts, and retry budgets with exponential
@@ -316,6 +326,14 @@ class Engine:
         self._refresh_mem_cap()
         self.sizing_stats = {"oom_events": 0, "oom_failures": 0,
                              "retry_overhead_s": 0.0}
+        # online runtime prediction (None == seed semantics, no recording).
+        # The predictor is armed lazily in _prepare: a PredictiveScheduler
+        # carries its own (possibly pre-warmed) model, and the node-group
+        # map comes from the scheduler's profiling when it has one.
+        self._predictor = None
+        self._pred_group: dict = {}              # node name -> group id
+        self._pred_pending: dict = {}            # instance -> placement pred
+        self.prediction_log: list[PredictionRecord] = []
         # fault injection + recovery policies (None == seed semantics)
         self._faults = None if self.cfg.faults is None \
             else FaultModel(self.cfg.faults)
@@ -617,6 +635,19 @@ class Engine:
         if self._spec_on:
             self._spec_p95[s] = self._spec_p95_for(task)
             self._name_slots[(task.workflow, task.name)].add(s)
+        if self._predictor is not None:
+            # record the completion-time prediction made *at placement*:
+            # co_res counts co-resident attempts including this one (the
+            # occupancy the contention model charges), so the pending
+            # tuple is exactly one training observation minus the actual
+            g = self._pred_group.get(node_name, 0)
+            co = int(na.n_running[i])
+            p = self._predictor.predict(task.workflow, task.name, g)
+            if p is None:
+                self._pred_pending[task.instance] = (g, co, None, "none")
+            else:
+                self._pred_pending[task.instance] = (
+                    g, co, p[0] * self._predictor.interference(co), p[1])
         self.running[task.instance] = task
 
     def _on_done(self, instance: str):
@@ -653,6 +684,18 @@ class Engine:
             task.node, task.start_t, task.end_t, task.req_cores,
             task.req_mem_gb, task.submit_t, completed=True,
             used_mem_gb=task.peak_mem_gb, outcome="done"))
+        if self._predictor is not None:
+            pend = self._pred_pending.pop(task.instance, None)
+            if pend is not None:
+                g, co, pred_s, level = pend
+                actual = task.end_t - task.start_t
+                self.prediction_log.append(PredictionRecord(
+                    task.instance, task.workflow, task.name, task.node, g,
+                    pred_s, level, co, actual))
+                # only completed attempts train the model; killed/partial
+                # attempts are dropped in _kill
+                self._predictor.observe(task.workflow, task.name, g, actual,
+                                        co)
         self._unfinished -= 1
         if task.end_t > self._max_end:
             self._max_end = task.end_t
@@ -691,6 +734,7 @@ class Engine:
         self.nodes[task.node].running.discard(task.instance)
         self.running.pop(task.instance, None)
         self._release_slot(task.instance)
+        self._pred_pending.pop(task.instance, None)
         # partial attempts consume cores/memory for their whole run: log
         # them (completed=False) so fairness/wastage accounting sees the
         # service — the seed silently dropped every killed attempt,
@@ -940,6 +984,7 @@ class Engine:
         self._use_array = self._detect_array_path()
         if self._use_array:
             self.scheduler.bind_cluster(self._na, self.nodes)
+        self._arm_prediction()
         self._mask_cache.clear()      # masks never survive across runs
         self._na.mask_dirty.clear()
         self._refresh_mem_cap()       # nodes may have been disabled directly
@@ -972,6 +1017,42 @@ class Engine:
                                    (t.submit_t, self._seq[iid], iid))
         self._unfinished = sum(1 for t in self.all_tasks.values()
                                if t.state not in ("done", "killed"))
+
+    def _arm_prediction(self):
+        """Arm the runtime-prediction subsystem (``cfg.prediction``).
+
+        The model is the scheduler's own when it carries one
+        (``PredictiveScheduler.model`` — possibly pre-warmed across runs,
+        the way benches share a TraceDB), otherwise a fresh one: the
+        engine then just measures, which is how the baselines get
+        comparable MAPE columns.  Node groups come from the scheduler's
+        phase-1 profiling when it has one (so the model's keys are
+        exactly the groups the scheduler places with) and degrade to
+        machine-type tiers otherwise.  A model-carrying scheduler with
+        the hook off is refused loudly: its model would never observe a
+        completion and it would silently place fair-forever."""
+        model = getattr(self.scheduler, "model", None)
+        if self.cfg.prediction is None:
+            if model is not None:
+                raise ValueError(
+                    "scheduler carries a runtime-prediction model but "
+                    "EngineConfig.prediction is None — the model would "
+                    "never observe a completion; set "
+                    "EngineConfig.prediction=PredictionConfig()")
+            return
+        if self._predictor is not None:        # re-runs / restored engines
+            return
+        self._predictor = model if model is not None \
+            else make_predictor(self.cfg.prediction)
+        info = getattr(self.scheduler, "info", None)
+        groups = getattr(info, "node_group", None)
+        if groups is not None:
+            self._pred_group = dict(groups)
+        else:
+            machines = sorted({sn.spec.machine for sn in self.nodes.values()})
+            tier = {m: i for i, m in enumerate(machines)}
+            self._pred_group = {name: tier[sn.spec.machine]
+                                for name, sn in self.nodes.items()}
 
     def _detect_array_path(self) -> bool:
         """Feature-detect the scheduler side of the array protocol.

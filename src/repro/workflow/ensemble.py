@@ -158,6 +158,10 @@ class _Topology:
             raise NotImplementedError(
                 "ensemble scan cannot express fault injection yet "
                 "(EngineConfig.faults)")
+        if cfg.prediction is not None:
+            raise NotImplementedError(
+                "ensemble scan cannot express runtime prediction yet "
+                "(EngineConfig.prediction)")
         if type(scheduler) not in _SUPPORTED:
             raise NotImplementedError(
                 f"ensemble supports exactly {[c.name for c in _SUPPORTED]}; "

@@ -16,8 +16,10 @@ import numpy as np
 from _hyp import given, settings, st
 
 from repro.core.monitor import TraceDB
+from repro.core.prediction import PredictionConfig
 from repro.core.profiler import NodeSpec
-from repro.core.scheduler import TENANT_SCHEDULERS, make_scheduler
+from repro.core.scheduler import (ALL_SCHEDULERS, TENANT_SCHEDULERS,
+                                  make_scheduler)
 from repro.core.sizing import STRATEGIES, SizingConfig
 from repro.workflow.dag import AbstractTask, WorkflowSpec
 from repro.workflow.engine import Engine, EngineConfig
@@ -95,15 +97,26 @@ def random_cluster(rng) -> list[NodeSpec]:
     return specs
 
 
+def _prediction_for(sched_name: str, seed: int):
+    """Prediction hook for a random case: required for "predictive"
+    (the engine refuses a model-carrying scheduler without it), mixed
+    into a third of the other cases so passive recording also runs under
+    churn/speculation/OOM chaos."""
+    if sched_name == "predictive" or seed % 3 == 0:
+        return PredictionConfig()
+    return None
+
+
 def _build_case(seed: int):
     rng = np.random.default_rng(seed)
     specs = random_cluster(rng)
-    sched_name = TENANT_SCHEDULERS[seed % len(TENANT_SCHEDULERS)]
+    sched_name = ALL_SCHEDULERS[seed % len(ALL_SCHEDULERS)]
     speculation = bool(rng.integers(0, 2))
     # strict mode: queued speculative losers are cancelled, so completion is
     # exactly-once (the seed-pinned default would execute them redundantly)
     cfg = EngineConfig(seed=seed, speculation=speculation,
-                       speculation_factor=1.5, cancel_stale_speculative=True)
+                       speculation_factor=1.5, cancel_stale_speculative=True,
+                       prediction=_prediction_for(sched_name, seed))
     disabled = None
     if len(specs) > 3 and rng.random() < 0.4:
         disabled = {specs[int(rng.integers(0, len(specs)))].name}
@@ -171,6 +184,18 @@ def test_engine_invariants(seed):
     # tenant tags survive into the monitor's traces
     assert {t.tenant for t in eng.db.records} <= {"ta", "tb"}
 
+    # prediction accounting (when the hook is armed): exactly one finalized
+    # record per completed attempt, no pending leak across kills/requeues
+    if eng.cfg.prediction is not None:
+        assert len(eng.prediction_log) == len(completed)
+        assert not eng._pred_pending
+        for pr in eng.prediction_log:
+            assert pr.actual_s > 0.0
+            assert pr.co_res >= 1
+            assert pr.predicted_s is None or pr.predicted_s > 0.0
+    else:
+        assert not eng.prediction_log
+
 
 @given(st.integers(0, 10_000_000))
 @settings(max_examples=12, deadline=None)
@@ -189,11 +214,12 @@ def test_engine_invariants_sized(seed):
     scfg = SizingConfig(strategy=STRATEGIES[seed % len(STRATEGIES)],
                         max_retries=int(rng.integers(1, 5)),
                         escalation_factor=float(rng.uniform(1.3, 2.5)))
+    sched = ALL_SCHEDULERS[seed % len(ALL_SCHEDULERS)]
     cfg = EngineConfig(seed=seed, sizing=scfg, quantile_method="linear",
                        speculation=bool(rng.integers(0, 2)),
                        speculation_factor=1.5,
-                       cancel_stale_speculative=True)
-    sched = TENANT_SCHEDULERS[seed % len(TENANT_SCHEDULERS)]
+                       cancel_stale_speculative=True,
+                       prediction=_prediction_for(sched, seed))
     disabled = None
     if len(specs) > 3 and rng.random() < 0.3:   # sizing x disabled nodes
         disabled = {specs[int(rng.integers(0, len(specs)))].name}
@@ -249,6 +275,8 @@ def test_engine_invariants_sized(seed):
     for t in eng.all_tasks.values():
         assert t.state in ("done", "killed"), (t.instance, t.state)
     assert res["makespan"] >= 0.0
+    # OOM kill/retry cycles must not leak pending prediction records
+    assert not eng._pred_pending
 
 
 @given(st.integers(0, 10_000_000))
@@ -273,11 +301,12 @@ def test_engine_invariants_faulted(seed):
                      timeout_factor=float(rng.uniform(3.0, 10.0)),
                      max_task_retries=int(rng.integers(1, 5)),
                      backoff_base_s=float(rng.uniform(0.5, 6.0)))
-    sched = TENANT_SCHEDULERS[seed % len(TENANT_SCHEDULERS)]
+    sched = ALL_SCHEDULERS[seed % len(ALL_SCHEDULERS)]
     cfg = EngineConfig(seed=seed, faults=fc,
                        speculation=bool(rng.integers(0, 2)),
                        speculation_factor=1.5,
-                       cancel_stale_speculative=True)
+                       cancel_stale_speculative=True,
+                       prediction=_prediction_for(sched, seed))
     eng = CheckedEngine(specs, make_scheduler(sched, specs, seed=seed),
                         TraceDB(), cfg)
     eng.submit(random_workflow(rng, "wfa"), run_id=0, seed=seed,
@@ -326,6 +355,8 @@ def test_engine_invariants_faulted(seed):
     # fault-failed instances stopped at their retry budget
     for t in eng.all_tasks.values():
         assert t.fault_retries <= fc.max_task_retries + 1
+    # crash/timeout kill cycles must not leak pending prediction records
+    assert not eng._pred_pending
 
 
 @given(st.integers(0, 10_000_000))

@@ -15,6 +15,7 @@ import pytest
 from _hyp import given, settings, st
 
 from repro.core.monitor import TraceDB
+from repro.core.prediction import PredictionConfig
 from repro.core.profiler import NodeSpec
 from repro.core.scheduler import make_scheduler
 from repro.core.sizing import SizingConfig
@@ -123,23 +124,32 @@ def _specs():
                      app_factor=1.0)]
 
 
-@pytest.mark.parametrize("cfg", [
-    EngineConfig(speculation=True),
-    EngineConfig(sizing=SizingConfig()),
-    EngineConfig(faults=FaultConfig()),
+# one parametrized loud-refusal suite: every engine feature and every
+# scheduler the batched scan cannot express must raise at *build* time
+# (match pins the message naming the culprit), never silently diverge
+@pytest.mark.parametrize("cfg,match", [
+    (EngineConfig(speculation=True), "speculation"),
+    (EngineConfig(sizing=SizingConfig()), "sizing"),
+    (EngineConfig(faults=FaultConfig()), "faults"),
+    (EngineConfig(prediction=PredictionConfig()), "prediction"),
 ])
-def test_unsupported_engine_features_refuse_loudly(cfg):
+def test_unsupported_engine_features_refuse_loudly(cfg, match):
     specs = _specs()
-    with pytest.raises(NotImplementedError):
+    with pytest.raises(NotImplementedError, match=match):
         run_ensemble(specs, [Submission(_toy())],
                      make_scheduler("fair", specs, seed=0), 1, config=cfg)
 
 
-def test_unsupported_scheduler_refuses_loudly():
+@pytest.mark.parametrize("sched,match", [
+    ("tarema", "TaremaScheduler"),
+    ("weighted-tarema", "WeightedTaremaScheduler"),
+    ("predictive", "PredictiveScheduler"),
+])
+def test_unsupported_scheduler_refuses_loudly(sched, match):
     specs = cluster_555()
-    with pytest.raises(NotImplementedError, match="TaremaScheduler"):
+    with pytest.raises(NotImplementedError, match=match):
         run_ensemble(specs, [Submission(_toy())],
-                     make_scheduler("tarema", specs, seed=0), 1)
+                     make_scheduler(sched, specs, seed=0), 1)
 
 
 def test_duplicate_instance_ids_refuse_loudly():

@@ -1,0 +1,271 @@
+"""Learned completion-time placement: the differential prediction harness.
+
+The tentpole property: ``IncrementalPredictor`` (O(1) folds) must match
+``OraclePredictor`` (full left-to-right replay of the observation log, no
+incremental state) **bit-for-bit** — every cell prediction, every fallback
+level, the fitted interference slope, and, end-to-end, every placement an
+oracle-driven engine makes.  Same slow-twin pattern as ``engine_ref.py``.
+
+Also covered: the ``EngineConfig.prediction`` gate (None is bit-for-bit
+seed-equivalent; recording is passive for non-predictive schedulers), the
+hierarchical cold-start fallback chain, the loud refusal of a
+model-carrying scheduler without the hook, interference steering, and
+snapshot/restore with a live model.
+"""
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+from test_engine_invariants import random_cluster, random_workflow
+
+from repro.core.monitor import TraceDB
+from repro.core.prediction import (LEVELS, IncrementalPredictor,
+                                   OraclePredictor, PredictionConfig,
+                                   error_report, make_predictor)
+from repro.core.scheduler import (ALL_SCHEDULERS, PredictiveScheduler,
+                                  make_scheduler)
+from repro.workflow.cluster import CLUSTERS
+from repro.workflow.engine import Engine, EngineConfig
+from repro.workflow.nfcore import WORKFLOWS
+
+
+def _mk(model="incremental", **kw):
+    return make_predictor(PredictionConfig(model=model, **kw))
+
+
+def _assert_models_bitwise_equal(inc, orc, keys, groups):
+    """Every query surface, compared with == (no tolerance)."""
+    assert inc.theta() == orc.theta()
+    for co in range(1, 10):
+        assert inc.interference(co) == orc.interference(co)
+    for k in keys:
+        assert inc.predict(*k) == orc.predict(*k), k
+    # fallback levels too: probe every (workflow, task) x every group and
+    # a group no observation ever touched
+    wts = {(w, t) for (w, t, _) in keys}
+    for (w, t) in wts:
+        for g in list(groups) + [max(groups, default=0) + 17]:
+            assert inc.predict(w, t, g) == orc.predict(w, t, g), (w, t, g)
+        ks = sorted(groups)
+        if ks:
+            a = inc.placement_scores(w, t, ks, list(range(len(ks))))
+            b = orc.placement_scores(w, t, ks, list(range(len(ks))))
+            assert (a is None) == (b is None)
+            if a is not None:
+                assert a.tolist() == b.tolist()
+
+
+# --------------------------------------------------- differential property
+@given(st.integers(0, 10_000_000))
+@settings(max_examples=10, deadline=None)
+def test_incremental_matches_oracle_bitwise(seed):
+    """Random DAGs x clusters x schedulers: feed the engine's completed
+    observation stream to both models; they must agree bit-for-bit at the
+    end AND at every prefix boundary we re-derive."""
+    rng = np.random.default_rng(seed)
+    specs = random_cluster(rng)
+    sched_name = ALL_SCHEDULERS[seed % len(ALL_SCHEDULERS)]
+    eng = Engine(specs, make_scheduler(sched_name, specs, seed=seed),
+                 TraceDB(), EngineConfig(seed=seed,
+                                         prediction=PredictionConfig()))
+    eng.submit(random_workflow(rng, "wfa"), run_id=0, seed=seed, prefix="a")
+    if rng.random() < 0.6:
+        eng.submit(random_workflow(rng, "wfb"), run_id=0, seed=seed + 1,
+                   at=float(rng.uniform(0.0, 40.0)), prefix="b")
+    eng.run()
+    stream = [(r.workflow, r.task, r.group, r.actual_s, r.co_res)
+              for r in eng.prediction_log]
+    assert stream, "run produced no completed observations"
+
+    inc, orc = _mk(), _mk("oracle")
+    keys = set()
+    groups = set()
+    check_at = {0, len(stream) // 2, len(stream) - 1}
+    for i, obs in enumerate(stream):
+        inc.observe(*obs)
+        orc.observe(*obs)
+        keys.add(obs[:3])
+        groups.add(obs[2])
+        if i in check_at:
+            _assert_models_bitwise_equal(inc, orc, keys, groups)
+    _assert_models_bitwise_equal(inc, orc, keys, groups)
+    assert inc.version == orc.version == len(stream)
+    # determinism: a fresh incremental fed the same stream is identical
+    inc2 = _mk()
+    for obs in stream:
+        inc2.observe(*obs)
+    _assert_models_bitwise_equal(inc2, orc, keys, groups)
+
+
+@given(st.integers(0, 10_000_000))
+@settings(max_examples=4, deadline=None)
+def test_oracle_driven_engine_places_identically(seed):
+    """End-to-end differential: an engine whose PredictiveScheduler runs on
+    the deliberately-slow OraclePredictor must produce the *identical*
+    trace to one on the fast incremental model — placement by placement."""
+    def build(model):
+        rng = np.random.default_rng(seed)
+        specs = random_cluster(rng)
+        cfg = PredictionConfig(model=model)
+        eng = Engine(specs,
+                     make_scheduler("predictive", specs, seed=seed,
+                                    config=cfg),
+                     TraceDB(), EngineConfig(seed=seed, prediction=cfg))
+        eng.submit(random_workflow(rng, "wfa"), run_id=0, seed=seed,
+                   prefix="a")
+        eng.submit(random_workflow(rng, "wfb"), run_id=0, seed=seed + 1,
+                   prefix="b")
+        res = eng.run()
+        return (res["makespan"], res["assignments"], list(eng.assignment_log),
+                list(eng.prediction_log))
+    assert build("incremental") == build("oracle")
+
+
+# ------------------------------------------------------- engine gate tests
+def test_prediction_none_is_seed_equivalent():
+    """Arming the hook with a non-predictive scheduler records passively:
+    the trace is bit-for-bit the prediction=None trace."""
+    def run(pred):
+        specs = CLUSTERS["5;5;5"]()
+        eng = Engine(specs, make_scheduler("tarema", specs, seed=3),
+                     TraceDB(), EngineConfig(seed=0, prediction=pred))
+        eng.submit(WORKFLOWS["eager"](), run_id=0, seed=7)
+        res = eng.run()
+        return eng, res
+    a, ra = run(None)
+    b, rb = run(PredictionConfig())
+    assert ra["makespan"] == rb["makespan"]
+    assert ra["assignments"] == rb["assignments"]
+    assert a.assignment_log == b.assignment_log
+    assert not a.prediction_log
+    # ... while the armed engine measured every completion
+    completed = [r for r in b.assignment_log if r.completed]
+    assert len(b.prediction_log) == len(completed)
+    assert not b._pred_pending
+    rep = error_report(b.prediction_log)
+    assert rep["n_scored"] > 0 and rep["mape"] is not None
+
+
+def test_model_carrying_scheduler_without_hook_refuses():
+    specs = CLUSTERS["5;5;5"]()
+    eng = Engine(specs, make_scheduler("predictive", specs, seed=0),
+                 TraceDB(), EngineConfig(seed=0))
+    eng.submit(WORKFLOWS["eager"](), run_id=0, seed=1)
+    with pytest.raises(ValueError, match="prediction"):
+        eng.run()
+
+
+def test_prediction_config_validates():
+    with pytest.raises(ValueError, match="model"):
+        PredictionConfig(model="nope")
+    with pytest.raises(ValueError, match="theta_max"):
+        PredictionConfig(theta_max=-1.0)
+    with pytest.raises(ValueError, match="factor_cap"):
+        PredictionConfig(factor_cap=0.5)
+
+
+# ------------------------------------------------- model unit behaviour
+def test_fallback_chain_levels():
+    """cell -> label (group-speed scaled) -> group -> global -> None."""
+    m = _mk()
+    assert m.predict("wf", "t", 0) is None           # nothing anywhere
+    m.observe("wf", "other", 1, 100.0, 1)
+    rt, level = m.predict("wf", "t", 0)
+    assert level == "global" and rt == 100.0         # task+group unseen
+    rt, level = m.predict("wf", "t", 1)
+    assert level == "group" and rt == 100.0          # group seen via other
+    m.observe("wf", "t", 1, 50.0, 1)
+    rt, level = m.predict("wf", "t", 0)
+    assert level == "label" and rt == 50.0           # task mean, g0 unscaled
+    rt, level = m.predict("wf", "t", 1)
+    assert level == "cell" and rt == 50.0            # the cell itself
+    # group-speed scaling: g0 is 2x slower than average -> scaled estimate
+    m.observe("wf", "other", 0, 300.0, 1)
+    rt, level = m.predict("wf", "t", 0)
+    assert level == "label"
+    assert rt == pytest.approx(50.0 * (300.0 / 150.0))
+    assert all(level in LEVELS for level in ("cell", "label", "group",
+                                             "global"))
+
+
+def test_interference_fit_recovers_slowdown():
+    """Observations generated by a linear contention law are recovered:
+    runtime = base * (1 + 0.5*(k-1)) -> theta ~= 0.5, and completion
+    scores price crowded nodes accordingly.  The recovery is approximate
+    because the regression normalizes against the *live* cell mean (the
+    value the predictor would have used at placement time), which the
+    contended samples themselves drag upward — hence the well-seeded
+    baseline and the loose tolerance; exactness is the differential
+    suite's job, not this one's."""
+    m = _mk()
+    base = 100.0
+    for _ in range(50):                              # pin the cell mean
+        m.observe("wf", "t", 0, base, 1)
+    for k in (2, 3, 4):
+        m.observe("wf", "t", 0, base * (1.0 + 0.5 * (k - 1)), k)
+    assert m.theta() == pytest.approx(0.5, rel=0.1)
+    assert m.interference(1) == 1.0
+    assert m.interference(3) == pytest.approx(2.0, rel=0.1)
+    # factor_cap ceilings the extrapolation
+    assert m.interference(1000) == m.cfg.factor_cap
+    # an idle slow node can beat a crowded fast one on completion time
+    scores = m.placement_scores("wf", "t", [0, 0], [0, 4])
+    assert scores[0] < scores[1]
+
+
+def test_predictive_scheduler_prefers_faster_group_when_warm():
+    specs = CLUSTERS["5;4;4;2"]()
+    sched = make_scheduler("predictive", specs, seed=1)
+    assert isinstance(sched, PredictiveScheduler)
+    groups = sorted(set(sched.info.node_group.values()))
+    assert len(groups) >= 2
+    fast, slow = groups[0], groups[1]
+    for _ in range(3):
+        sched.model.observe("wf", "t", fast, 50.0, 1)
+        sched.model.observe("wf", "t", slow, 200.0, 1)
+    scores = sched.model.placement_scores("wf", "t", [fast, slow], [0, 0])
+    assert scores[0] < scores[1]
+
+
+def test_snapshot_restore_with_live_model():
+    """Mid-run snapshot/restore with the prediction subsystem armed: the
+    restored engine (model included in the pickled graph) must finish
+    bit-for-bit like the uninterrupted one."""
+    def fresh():
+        specs = CLUSTERS["5;5;5"]()
+        eng = Engine(specs, make_scheduler("predictive", specs, seed=2),
+                     TraceDB(), EngineConfig(seed=0,
+                                             prediction=PredictionConfig()))
+        eng.submit(WORKFLOWS["eager"](), run_id=0, seed=5)
+        return eng
+
+    ref = fresh()
+    res_ref = ref.run()
+
+    eng = fresh()
+    eng.run(until=res_ref["makespan"] / 2)
+    blob = eng.snapshot()
+    resumed = Engine.restore(blob)
+    # the restored scheduler still shares its model with the engine
+    assert resumed.scheduler.model is resumed._predictor
+    res = resumed.run()
+    assert res["makespan"] == res_ref["makespan"]
+    assert res["assignments"] == res_ref["assignments"]
+    assert resumed.prediction_log == ref.prediction_log
+
+
+def test_error_report_columns():
+    eng_specs = CLUSTERS["5;5;5"]()
+    eng = Engine(eng_specs, make_scheduler("predictive", eng_specs, seed=0),
+                 TraceDB(), EngineConfig(seed=0,
+                                         prediction=PredictionConfig()))
+    eng.submit(WORKFLOWS["eager"](), run_id=0, seed=3)
+    eng.submit(WORKFLOWS["eager"](), run_id=1, seed=4, at=10.0)
+    eng.run()
+    rep = error_report(eng.prediction_log)
+    assert rep["n_records"] == len(eng.prediction_log)
+    assert rep["n_scored"] + rep["n_cold_none"] == rep["n_records"]
+    assert rep["n_warm"] + rep["n_cold"] == rep["n_records"]
+    assert rep["mape"] is not None and rep["mape"] >= 0.0
+    assert rep["per_cell"]
+    for cell in rep["per_cell"].values():
+        assert cell["n"] > 0 and cell["mape"] >= 0.0

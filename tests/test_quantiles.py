@@ -1,0 +1,79 @@
+"""Property tests: TraceDB's "linear" order statistic == numpy.quantile.
+
+The sizing predictors and the ``EngineConfig.quantile_method="linear"``
+switch all lean on ``TraceDB._quantile(..., "linear")`` being *the*
+linearly-interpolated quantile.  This suite pins it to ``numpy.quantile``
+with exact ``==`` (no tolerance) on random histories — which is what
+caught the original one-sided lerp drifting a ulp from numpy's two-sided
+form on ~2% of inputs — including the degenerate single-sample and
+all-equal histories, through both public entry points
+(``runtime_quantile`` and ``usage_quantile``).
+"""
+import numpy as np
+from _hyp import given, settings, st
+
+from repro.core.monitor import TaskTrace, TraceDB
+
+
+def _db_with(runtimes, mems):
+    db = TraceDB()
+    for i, (rt, mem) in enumerate(zip(runtimes, mems)):
+        db.add(TaskTrace("wf", "t", f"i{i}", 0, "n0", rt,
+                         {"cpu": 50.0, "mem": mem, "io": 1.0}))
+    return db
+
+
+@given(st.lists(st.floats(0.001, 1e6), min_size=1, max_size=60),
+       st.floats(0.0, 1.0))
+@settings(max_examples=60, deadline=None)
+def test_runtime_quantile_linear_matches_numpy(runtimes, q):
+    db = _db_with(runtimes, [1.0] * len(runtimes))
+    got = db.runtime_quantile("wf", "t", q, method="linear")
+    assert got == float(np.quantile(np.array(sorted(runtimes)), q))
+
+
+@given(st.lists(st.floats(0.001, 1e4), min_size=1, max_size=60),
+       st.floats(0.0, 1.0))
+@settings(max_examples=60, deadline=None)
+def test_usage_quantile_linear_matches_numpy(mems, q):
+    db = _db_with([1.0] * len(mems), mems)
+    got = db.usage_quantile("wf", "t", "mem", q, method="linear")
+    assert got == float(np.quantile(np.array(sorted(mems)), q))
+
+
+@given(st.floats(0.0, 1.0))
+@settings(max_examples=25, deadline=None)
+def test_single_sample_history(q):
+    db = _db_with([42.5], [3.25])
+    assert db.runtime_quantile("wf", "t", q, method="linear") == 42.5
+    assert db.usage_quantile("wf", "t", "mem", q, method="linear") == 3.25
+
+
+@given(st.integers(1, 40), st.floats(0.0, 1.0))
+@settings(max_examples=25, deadline=None)
+def test_all_equal_history(n, q):
+    db = _db_with([7.75] * n, [2.5] * n)
+    assert db.runtime_quantile("wf", "t", q, method="linear") == 7.75
+    assert db.usage_quantile("wf", "t", "mem", q, method="linear") == 2.5
+
+
+def test_exact_grid_positions():
+    """q landing exactly on an order-statistic index interpolates to the
+    sample itself, at both ends and in the middle."""
+    xs = [1.0, 2.0, 3.0, 4.0, 5.0]
+    db = _db_with(xs, xs)
+    for q, want in ((0.0, 1.0), (0.25, 2.0), (0.5, 3.0), (0.75, 4.0),
+                    (1.0, 5.0)):
+        assert db.runtime_quantile("wf", "t", q, method="linear") == want
+
+
+def test_quantile_raw_static_method_matches_numpy_dense():
+    """Brute sweep of the raw helper over adversarial t values (the lerp
+    switches form at t == 0.5)."""
+    rng = np.random.default_rng(0)
+    for n in (2, 3, 5, 17, 33):
+        xs = sorted(rng.uniform(-1e3, 1e3, n).tolist())
+        for q in np.linspace(0.0, 1.0, 97):
+            q = float(q)
+            assert TraceDB._quantile(xs, q, "linear") \
+                == float(np.quantile(np.array(xs), q)), (n, q)

@@ -23,8 +23,9 @@ from _hyp import given, settings, st
 from test_engine_invariants import random_cluster, random_workflow
 
 from repro.core.monitor import TraceDB
-from repro.core.scheduler import (TENANT_SCHEDULERS, FairScheduler,
-                                  make_scheduler)
+from repro.core.prediction import PredictionConfig
+from repro.core.scheduler import (ALL_SCHEDULERS, TENANT_SCHEDULERS,
+                                  FairScheduler, make_scheduler)
 from repro.core.sizing import STRATEGIES, SizingConfig
 from repro.workflow.cluster import CLUSTERS
 from repro.workflow.dag import AbstractTask, WorkflowSpec
@@ -36,7 +37,8 @@ from repro.workflow.nfcore import WORKFLOWS
 def _snapshot(eng, res):
     return (res["makespan"], res["assignments"],
             sorted((t.instance, t.state) for t in eng.all_tasks.values()),
-            list(eng.assignment_log))    # NamedTuples: compares exact floats
+            list(eng.assignment_log),    # NamedTuples: compares exact floats
+            list(eng.prediction_log))    # incl. per-placement predictions
 
 
 def _run_path(build, path):
@@ -54,15 +56,18 @@ def _assert_paths_identical(build):
     assert a[1] == d[1]          # full seed-shaped trace
     assert a[2] == d[2]          # final states
     assert a[3] == d[3]          # attempt log incl. killed/oom records
+    assert a[4] == d[4]          # per-placement prediction records
 
 
 @pytest.mark.parametrize("cluster", ["5;5;5", "5;4;4;2"])
-@pytest.mark.parametrize("sched", TENANT_SCHEDULERS)
+@pytest.mark.parametrize("sched", ALL_SCHEDULERS)
 def test_paths_identical_paper_clusters(cluster, sched):
     def build(path):
         specs = CLUSTERS[cluster]()
+        pred = PredictionConfig() if sched == "predictive" else None
         eng = Engine(specs, make_scheduler(sched, specs, seed=3), TraceDB(),
-                     EngineConfig(seed=0, placement_path=path))
+                     EngineConfig(seed=0, placement_path=path,
+                                  prediction=pred))
         eng.submit(WORKFLOWS["viralrecon"](), run_id=0, seed=11)
         eng.submit(WORKFLOWS["cageseq"](), run_id=0, seed=13)
         return eng
@@ -103,7 +108,7 @@ def test_paths_identical_random(seed):
     def build(path):
         rng = np.random.default_rng(seed)
         specs = random_cluster(rng)
-        sched_name = TENANT_SCHEDULERS[seed % len(TENANT_SCHEDULERS)]
+        sched_name = ALL_SCHEDULERS[seed % len(ALL_SCHEDULERS)]
         sizing = None
         if rng.random() < 0.35:
             sizing = SizingConfig(strategy=STRATEGIES[seed % len(STRATEGIES)],
@@ -116,11 +121,15 @@ def test_paths_identical_random(seed):
                 mean_downtime_s=float(rng.uniform(10.0, 60.0)),
                 task_fail_prob=float(rng.uniform(0.0, 0.2)),
                 backoff_base_s=float(rng.uniform(1.0, 8.0)))
+        # prediction: mandatory for the predictive scheduler, mixed into a
+        # third of the rest so passive recording parity is covered too
+        pred = PredictionConfig() \
+            if sched_name == "predictive" or seed % 3 == 0 else None
         cfg = EngineConfig(seed=seed, placement_path=path,
                            speculation=bool(rng.integers(0, 2)),
                            speculation_factor=1.5,
                            cancel_stale_speculative=bool(rng.integers(0, 2)),
-                           sizing=sizing, faults=faults,
+                           sizing=sizing, faults=faults, prediction=pred,
                            quantile_method="linear" if sizing else "seed")
         disabled = None
         if len(specs) > 3 and rng.random() < 0.4:
@@ -264,6 +273,33 @@ def test_wfq_charge_is_probe_independent():
                                              for t in tenants}),
                      TraceDB(), EngineConfig(seed=0, placement_path=path))
         submit_stream(eng, tenants, seed=5)
+        return eng
+    _assert_paths_identical(build)
+
+
+def test_predictive_warm_model_parity():
+    """A PredictiveScheduler re-run over a model warmed by a previous run
+    (the bench protocol: shared model, shared TraceDB) must place
+    identically on both paths — warm cell means, fitted interference and
+    all."""
+    from repro.core.prediction import make_predictor
+
+    def build(path):
+        specs = CLUSTERS["5;4;4;2"]()
+        db = TraceDB()
+        model = make_predictor(PredictionConfig())
+        warm = Engine(specs,
+                      make_scheduler("predictive", specs, seed=3, model=model),
+                      db, EngineConfig(seed=0, placement_path=path,
+                                       prediction=PredictionConfig()))
+        warm.submit(WORKFLOWS["eager"](), run_id=0, seed=11)
+        warm.run()
+        assert model.version > 0         # the warm run actually trained it
+        eng = Engine(specs,
+                     make_scheduler("predictive", specs, seed=3, model=model),
+                     db, EngineConfig(seed=1, placement_path=path,
+                                      prediction=PredictionConfig()))
+        eng.submit(WORKFLOWS["eager"](), run_id=1, seed=11)
         return eng
     _assert_paths_identical(build)
 

@@ -22,6 +22,7 @@ def _run(code: str) -> str:
     return out.stdout
 
 
+@pytest.mark.slow
 def test_train_and_serve_lower_on_3d_mesh():
     print(_run("""
         import jax, jax.numpy as jnp
@@ -60,6 +61,7 @@ def test_train_and_serve_lower_on_3d_mesh():
     """))
 
 
+@pytest.mark.slow
 def test_sharded_train_matches_single_device():
     print(_run("""
         import jax, jax.numpy as jnp, numpy as np
