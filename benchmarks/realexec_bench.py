@@ -1,0 +1,161 @@
+"""Real-execution benchmark: the full Tarema pipeline on *measured* data
+(ROADMAP open item 4 acceptance artifact).
+
+End to end, zero simulation: ``local_nodes`` carves the host into virtual
+nodes (disjoint cpu affinity, RAM vs disk scratch), the ``node_profile``
+payload benchmarks each node under its own affinity/scratch (phase 1),
+``choose_k`` groups the measured profiles (phase 2a), a fair warm-up round
+of the self-host DAG — the repo's own pipeline/kernel/io jobs as real
+subprocesses — fills the TraceDB with measured usage, phase-2b labels every
+task from those measurements, and the remaining rounds place with
+``TaremaScheduler`` built on the *measured* profiles (phase 3).
+
+Reported per round: wall makespan, per-task measured usage means, and the
+final task labels.  ``acceptance`` gates the ISSUE-9 criteria: every
+instance completed, usage came from real child rusage (cpu seconds > 0
+somewhere), and >= 2 distinct task label vectors emerged from measurement.
+
+Emits ``benchmarks/results/BENCH_realexec.json`` (committed full run);
+``--quick`` writes the ``.quick.json`` twin so CI never clobbers the
+committed trajectory.
+
+    PYTHONPATH=src python -m benchmarks.realexec_bench [--quick] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import labeling
+from repro.core.clustering import choose_k
+from repro.core.monitor import TASK_FEATURES, TraceDB
+from repro.core.scheduler import TaremaScheduler, make_scheduler
+from repro.workflow.controlplane import ControlPlane, ControlPlaneConfig
+from repro.workflow.jobmanager import LocalProcessBackend, local_nodes
+from repro.workflow.selfhost import (make_runner, profile_backend,
+                                     selfhost_workflow)
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+OUT_PATH = os.path.join(RESULTS, "BENCH_realexec.json")
+
+
+def main(quick: bool = False, out_path: str = OUT_PATH) -> dict:
+    print("realexec_bench")
+    if quick and out_path == OUT_PATH:
+        out_path = OUT_PATH.replace(".json", ".quick.json")
+    scale = "quick" if quick else "full"
+    n_tarema_rounds = 1 if quick else 2
+    include_train = not quick            # full mode runs real LM steps
+    nodes = local_nodes(2)
+    backend = LocalProcessBackend(nodes, runner=make_runner(scale))
+    wf = selfhost_workflow(quick=quick, include_train=include_train)
+    task_names = [t.name for t in wf.tasks]
+    try:
+        # ---- phase 1: measured node profiles (sequential, uncontended)
+        t0 = time.perf_counter()
+        profiles = profile_backend(backend, scale=scale)
+        profile_s = time.perf_counter() - t0
+        for p in profiles:
+            print(f"realexec_bench/profile/{p.node},{profile_s * 1e6:.0f},"
+                  f"cpu={p.features['cpu']:.1f}"
+                  f",mem={p.features['mem']:.1f}"
+                  f",io_w={p.features['io_seq_write']:.0f}")
+        # ---- phase 2a: group the measured profiles
+        X = np.stack([p.vector() for p in profiles])
+        grouping = choose_k(X, k_max=6)
+        info = labeling.build_group_info(profiles, grouping["labels"])
+        # ---- rounds: fair warm-up, then Tarema on measured profiles
+        db = TraceDB()
+        specs = backend.nodespecs()
+        rounds = []
+        for r in range(1 + n_tarema_rounds):
+            if r == 0:
+                sched = make_scheduler("fair", specs, seed=0)
+            else:
+                sched = TaremaScheduler(specs, seed=0, profiles=profiles)
+            cp = ControlPlane(backend, sched, db,
+                              ControlPlaneConfig(max_wall_s=600.0))
+            cp.submit(wf, run_id=r, seed=r, prefix=f"r{r}")
+            t0 = time.perf_counter()
+            res = cp.run()
+            wall = time.perf_counter() - t0
+            n_done = sum(1 for rec in cp.assignment_log if rec.completed)
+            all_done = all(t.state == "done"
+                           for t in cp.all_tasks.values())
+            rounds.append({
+                "round": r, "scheduler": sched.name,
+                "makespan_s": res["makespan"], "wall_s": wall,
+                "completed": n_done, "all_done": all_done,
+                "retries": dict(cp.retry_stats),
+            })
+            print(f"realexec_bench/round{r}/{sched.name},"
+                  f"{wall * 1e6:.0f},makespan={res['makespan']:.2f}"
+                  f",completed={n_done}")
+        # ---- phase 2b: labels from *measured* usage
+        labels = {}
+        usage_means = {}
+        for name in task_names:
+            lab = labeling.label_task(db, info, wf.name, name)
+            labels[name] = lab
+            usage_means[name] = {
+                f: db.mean_usage(wf.name, name, f) for f in TASK_FEATURES}
+            print(f"# {name}: labels={lab} usage="
+                  + ",".join(f"{f}={usage_means[name][f]:.2f}"
+                             for f in TASK_FEATURES))
+    finally:
+        backend.close()
+    distinct = len({tuple(sorted(l.items()))
+                    for l in labels.values() if l})
+    measured = any(u["cpu"] and u["cpu"] > 0.0
+                   for u in usage_means.values())
+    acceptance = {
+        "n_node_groups": int(info.n_groups),
+        "distinct_task_labels": distinct,
+        "all_rounds_completed": all(r["all_done"] for r in rounds),
+        "measured_usage": bool(measured),
+        "target": ">= 2 distinct task label vectors from measured usage, "
+                  "all instances completed, >= 2 node groups",
+        "pass": (distinct >= 2 and measured and info.n_groups >= 2
+                 and all(r["all_done"] for r in rounds)),
+    }
+    print(f"# acceptance: {distinct} distinct labels over "
+          f"{info.n_groups} node groups -> "
+          f"{'PASS' if acceptance['pass'] else 'FAIL'}")
+    out = {
+        "meta": {"quick": quick, "scale": scale,
+                 "n_nodes": len(nodes),
+                 "node_kinds": [n.kind for n in nodes],
+                 "cpus_per_node": [len(n.cpus) for n in nodes],
+                 "include_train": include_train,
+                 "generated_unix": int(time.time())},
+        "profiles": [{"node": p.node, "machine": p.machine,
+                      "features": p.features, "static": p.static}
+                     for p in profiles],
+        "grouping": {"k": int(info.n_groups),
+                     "labels": [int(l) for l in grouping["labels"]],
+                     "silhouette": float(grouping.get("silhouette", 0.0))},
+        "rounds": rounds,
+        "task_usage_means": usage_means,
+        "task_labels": labels,
+        "acceptance": acceptance,
+    }
+    if os.path.dirname(out_path):
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"# wrote {out_path}")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: 6-task DAG, no train payload, writes "
+                         "the .quick.json twin")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    main(quick=args.quick, out_path=args.out)

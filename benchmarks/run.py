@@ -26,8 +26,9 @@ def main() -> None:
     from benchmarks import (engine_bench, ensemble_bench, faults_bench,
                             fig3_workflow_profiles, fig45_runtimes,
                             fig67_usage, fig8_multiworkflow, kernel_bench,
-                            perf_variants, prediction_bench, roofline,
-                            sizing_bench, table4_profiling, tenancy_bench)
+                            perf_variants, prediction_bench, realexec_bench,
+                            roofline, sizing_bench, table4_profiling,
+                            tenancy_bench)
     suites = {
         "table4": table4_profiling.main,
         "fig3": fig3_workflow_profiles.main,
@@ -43,6 +44,7 @@ def main() -> None:
         "kernels": kernel_bench.main,
         "engine": engine_bench.main,
         "ensemble": ensemble_bench.main,
+        "realexec": realexec_bench.main,
     }
     os.makedirs(RESULTS, exist_ok=True)
     all_out = {}

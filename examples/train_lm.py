@@ -1,10 +1,14 @@
 """End-to-end LM training with checkpoint/restart + failure injection.
 
-Trains a reduced llama3-family model on the synthetic pipeline, crashes
-itself at step 60, recovers from the latest checkpoint, and finishes —
-demonstrating the fault-tolerance substrate.  ~2-4 minutes on CPU.
+Trains a tiny llama3-family model on the synthetic pipeline, crashes
+itself at step 20, recovers from the latest checkpoint, and finishes —
+demonstrating the fault-tolerance substrate.  The default tiny preset
+runs in well under a minute on one CPU core (this is also the flagship
+workload the real-execution backend launches as its `train` task, see
+src/repro/workflow/selfhost.py); pass --preset small --steps 120 for the
+older, longer demo.
 
-    PYTHONPATH=src python examples/train_lm.py [--steps 120]
+    PYTHONPATH=src python examples/train_lm.py [--steps 40] [--preset tiny]
 """
 import sys
 import tempfile
@@ -12,13 +16,14 @@ import tempfile
 from repro.launch.train import main
 
 if __name__ == "__main__":
-    steps = "120"
-    if "--steps" in sys.argv:
-        steps = sys.argv[sys.argv.index("--steps") + 1]
+    arg = lambda k, d: sys.argv[sys.argv.index(k) + 1] if k in sys.argv else d
+    steps = arg("--steps", "40")
+    preset = arg("--preset", "tiny")
+    fail_at = str(max(int(steps) // 2, 1))
     with tempfile.TemporaryDirectory() as d:
-        out = main(["--arch", "llama3.2-3b", "--preset", "small",
-                    "--steps", steps, "--batch", "8", "--seq", "128",
-                    "--ckpt-dir", d, "--ckpt-every", "25", "--async-ckpt",
-                    "--fail-at", "60", "--lr", "3e-3"])
+        out = main(["--arch", "llama3.2-3b", "--preset", preset,
+                    "--steps", steps, "--batch", "8", "--seq", "64",
+                    "--ckpt-dir", d, "--ckpt-every", "10", "--async-ckpt",
+                    "--fail-at", fail_at, "--lr", "3e-3"])
     assert out["final_loss"] < out["first_loss"] * 0.9, out
     print("loss decreased through a simulated crash + recovery: OK")

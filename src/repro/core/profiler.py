@@ -118,10 +118,12 @@ def _bench_memstream(mb: int = 256, reps: int = 4) -> float:
     return 2.0 * n * 4 / dt / 1e9
 
 
-def _bench_io(mb: int = 64) -> tuple[float, float]:
-    """(write MB/s, read MB/s) on a tmpfile (the fio analogue)."""
+def _bench_io(mb: int = 64, dir: str = None) -> tuple[float, float]:
+    """(write MB/s, read MB/s) on a tmpfile (the fio analogue).  ``dir``
+    points the tmpfile at a specific scratch volume (tmpfs vs disk) so the
+    real-execution backend can profile per-node storage."""
     buf = os.urandom(mb * 1024 * 1024)
-    with tempfile.NamedTemporaryFile(delete=False) as f:
+    with tempfile.NamedTemporaryFile(delete=False, dir=dir) as f:
         path = f.name
         t0 = time.perf_counter()
         f.write(buf)
@@ -136,11 +138,43 @@ def _bench_io(mb: int = 64) -> tuple[float, float]:
     return w, r
 
 
-def profile_local(name: str = "localhost") -> NodeProfile:
-    gflops = _bench_matmul()
-    membw = _bench_memstream()
-    w, r = _bench_io()
+def _host_mem_gb() -> float:
+    """Total host memory in GB (0.0 where /proc/meminfo is unavailable)."""
+    try:
+        with open("/proc/meminfo") as f:
+            for line in f:
+                if line.startswith("MemTotal:"):
+                    return int(line.split()[1]) / 1024.0 ** 2   # kB -> GB
+    except OSError:
+        pass
+    return 0.0
+
+
+def _affinity_cores() -> int:
+    """Cores *this process* may use — affinity-aware, so a backend child
+    profiling its virtual node reports the node's core budget, not the
+    whole machine's."""
+    if hasattr(os, "sched_getaffinity"):
+        try:
+            return len(os.sched_getaffinity(0))
+        except OSError:
+            pass
+    return os.cpu_count() or 1
+
+
+def profile_local(name: str = "localhost", machine: str = "local", *,
+                  matmul_n: int = 1024, stream_mb: int = 256,
+                  io_mb: int = 64, reps: int = 4,
+                  scratch: str = None) -> NodeProfile:
+    """Benchmark the current host (under its current cpu affinity) into a
+    NodeProfile.  Size parameters shrink the benchmarks for smoke tests
+    and per-node backend profiling; ``scratch`` points the I/O benchmark
+    at the node's storage volume."""
+    gflops = _bench_matmul(matmul_n, reps)
+    membw = _bench_memstream(stream_mb, reps)
+    w, r = _bench_io(io_mb, dir=scratch)
     feats = {"cpu": gflops, "mem": membw, "io_seq_read": r, "io_seq_write": w,
              "io_rand_read": r, "io_rand_write": w}
-    return NodeProfile(name, "local", feats,
-                       {"cores": os.cpu_count() or 1, "mem_gb": 0.0})
+    return NodeProfile(name, machine, feats,
+                       {"cores": _affinity_cores(),
+                        "mem_gb": _host_mem_gb()})

@@ -182,10 +182,17 @@ class FillNodesScheduler(Scheduler):
 
 
 class _ProfiledScheduler(Scheduler):
-    """Shared phase-1 state: profiles, groups, labels."""
+    """Shared phase-1 state: profiles, groups, labels.
 
-    def __init__(self, specs, seed: int = 0):
-        self.profiles: list[NodeProfile] = profile_cluster_synthetic(specs, seed)
+    ``profiles`` overrides the synthetic phase-1 benchmarks with externally
+    *measured* ones (the real-execution backend profiles its nodes via
+    ``profile_local`` / ``selfhost.profile_backend``); grouping/labeling
+    are identical either way.  One profile per spec, same node names."""
+
+    def __init__(self, specs, seed: int = 0,
+                 profiles: list[NodeProfile] | None = None):
+        self.profiles: list[NodeProfile] = list(profiles) \
+            if profiles is not None else profile_cluster_synthetic(specs, seed)
         X = np.stack([p.vector() for p in self.profiles])
         self.grouping = choose_k(X, k_max=6)
         self.info = labeling.build_group_info(self.profiles, self.grouping["labels"])
@@ -220,8 +227,8 @@ class SJFNScheduler(_ProfiledScheduler):
     name = "sjfn"
     supports_array_placement = True
 
-    def __init__(self, specs, seed: int = 0):
-        super().__init__(specs, seed)
+    def __init__(self, specs, seed: int = 0, profiles=None):
+        super().__init__(specs, seed, profiles)
         self.rng = np.random.default_rng(seed + 2)
         self.speed = {p.node: p.features["cpu"] for p in self.profiles}
         self._est_key = None         # (db.uid, db.version) behind _est_cache
@@ -278,8 +285,8 @@ class TaremaScheduler(_ProfiledScheduler):
     name = "tarema"
     supports_array_placement = True
 
-    def __init__(self, specs, seed: int = 0):
-        super().__init__(specs, seed)
+    def __init__(self, specs, seed: int = 0, profiles=None):
+        super().__init__(specs, seed, profiles)
         self.rng = np.random.default_rng(seed + 1)
         self._priority_cache: dict = {}  # label vector -> group priority list
 
@@ -331,8 +338,9 @@ class WeightedTaremaScheduler(TaremaScheduler):
     name = "weighted-tarema"
 
     def __init__(self, specs, seed: int = 0, weights: dict | None = None,
-                 pressure: float = 1.0, share_tolerance: float = 0.02):
-        super().__init__(specs, seed)
+                 pressure: float = 1.0, share_tolerance: float = 0.02,
+                 profiles=None):
+        super().__init__(specs, seed, profiles)
         self.weights = dict(weights or {})
         self.pressure = pressure
         self.share_tolerance = share_tolerance
@@ -478,8 +486,9 @@ class PredictiveScheduler(_ProfiledScheduler):
     supports_array_placement = True
 
     def __init__(self, specs, seed: int = 0,
-                 config: PredictionConfig | None = None, model=None):
-        super().__init__(specs, seed)
+                 config: PredictionConfig | None = None, model=None,
+                 profiles=None):
+        super().__init__(specs, seed, profiles)
         self.rng = np.random.default_rng(seed + 4)
         self.model = model if model is not None \
             else make_predictor(config or PredictionConfig())
@@ -529,9 +538,9 @@ def make_scheduler(name: str, specs, seed: int = 0, **kw) -> Scheduler:
     if name == "fillnodes":
         return FillNodesScheduler(names, seed)
     if name == "sjfn":
-        return SJFNScheduler(specs, seed)
+        return SJFNScheduler(specs, seed, **kw)
     if name == "tarema":
-        return TaremaScheduler(specs, seed)
+        return TaremaScheduler(specs, seed, **kw)
     if name == "weighted-tarema":
         return WeightedTaremaScheduler(specs, seed, **kw)
     if name == "predictive":

@@ -28,6 +28,12 @@ from repro.train.step import make_train_step
 
 
 def build(preset: str, arch: str):
+    if preset == "tiny":    # < 1M params, seconds/step on one CPU core —
+        # the fast smoke path for examples/train_lm.py and the workload the
+        # real-execution backend's `train` task runs (workflow/selfhost.py)
+        return get_smoke_config(arch).with_overrides(
+            param_dtype="float32", n_layers=2, d_model=64, n_heads=4,
+            n_kv_heads=2, head_dim=16, d_ff=256, vocab=256)
     if preset == "smoke":
         return get_smoke_config(arch).with_overrides(param_dtype="float32")
     if preset == "small":   # ~20M params, minutes on CPU
@@ -43,7 +49,7 @@ def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-3b")
     ap.add_argument("--preset", default="smoke",
-                    choices=["smoke", "small", "full"])
+                    choices=["tiny", "smoke", "small", "full"])
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)

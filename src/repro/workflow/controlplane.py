@@ -1,0 +1,567 @@
+"""Control plane / execution-backend split (ROADMAP open item 4).
+
+The Tarema pipeline (profile -> group -> label -> allocate) had only ever
+been exercised against the simulator in ``engine.py``.  This module factors
+the *decision* side of that loop — queue ordering, feasibility, placement
+through the PR-4 scheduler seam (``select_node`` / ``select_node_idx``),
+retry/OOM policy, and TraceDB ingestion — away from the *execution* side,
+behind a four-call backend protocol:
+
+    nodes()                      -> the cluster the control plane places on
+    launch(task, node, request)  -> start one attempt of `task` on `node`
+    poll(timeout)                -> attempts that ended since the last poll
+    kill(instance)               -> abort a running attempt
+
+Two backends ship here / in ``jobmanager.py``:
+
+  * ``SimBackend`` wraps the existing vectorized ``Engine``.  The simulator
+    is event-driven and fuses decision and execution into one clock-jumping
+    loop whose floating-point evaluation order is pinned bit-for-bit by the
+    equivalence suites — so the sim path does NOT re-drive the engine
+    through the generic real-time loop below.  ``ControlPlane`` detects
+    ``backend.is_simulated`` and delegates submit/run/snapshot straight to
+    the wrapped engine: every existing entry point (``Engine.run``,
+    snapshot/restore, faults, sizing, prediction) keeps working unchanged,
+    and the shared *decision code* (``detect_array_path``,
+    ``suffix_min_demand``, the scheduler seam itself) is what the two paths
+    genuinely have in common.
+  * ``LocalProcessBackend`` (``repro.workflow.jobmanager``) launches real
+    subprocesses with cpu-affinity-limited cores, samples peak RSS + wall
+    time, and reports measured usage — the control plane feeds it into the
+    same ``TraceDB``/monitor path, so labeling and Tarema's phase-3
+    allocation run unchanged on real measurements.
+
+The real-time loop mirrors the engine's semantics where they transfer:
+dependency-counter ready promotion, ``scheduler.order`` + array/dict
+placement over a ``_NodeArrays`` feasibility mask, per-attempt
+``AssignmentRecord`` logging (completed and killed attempts alike), OOM
+retries under an escalated request, a fault-retry budget, and transitive
+downstream cancellation on permanent failure.  What does *not* transfer is
+the virtual clock: time here is wall time (seconds since ``run()`` began),
+contention is whatever the machine actually does, and usage comes from the
+child's rusage instead of the synthetic work model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from collections import defaultdict
+from typing import Optional
+
+import numpy as np
+
+from repro.core.fairness import AssignmentRecord
+from repro.core.monitor import TaskTrace, TraceDB
+from repro.core.profiler import NodeSpec
+from repro.workflow.dag import TaskInstance, WorkflowSpec, instantiate
+
+
+# --------------------------------------------------------------- decision
+# helpers shared by the simulator and the real-time loop (moved here from
+# engine.py with the extraction — they are pure functions of the scheduler
+# / queue and belong to the control plane layer)
+
+def detect_array_path(scheduler, mode: str = "auto") -> bool:
+    """Feature-detect the scheduler side of the array protocol.
+
+    A scheduler serves the array path when it opts in
+    (``supports_array_placement``) and exposes both hooks — and, for
+    subclasses, when ``select_node`` was not overridden *deeper* in the
+    MRO than ``select_node_idx`` (customized dict semantics without an
+    array twin must win, not be bypassed).  ``mode="dict"`` forces the
+    fallback; ``"array"`` raises instead of silently degrading.
+    """
+    if mode not in ("auto", "array", "dict"):
+        raise ValueError(f"unknown placement_path: {mode!r}")
+    if mode == "dict":
+        return False
+    ok = (getattr(scheduler, "supports_array_placement", False)
+          and callable(getattr(scheduler, "select_node_idx", None))
+          and callable(getattr(scheduler, "bind_cluster", None)))
+    if ok:
+        mro = type(scheduler).__mro__
+        depth = lambda attr: next(
+            (i for i, c in enumerate(mro) if attr in c.__dict__),
+            len(mro))
+        ok = depth("select_node_idx") <= depth("select_node")
+    if not ok and mode == "array":
+        raise ValueError(
+            f"scheduler {getattr(scheduler, 'name', scheduler)!r} cannot "
+            "serve placement_path='array' (no select_node_idx fast path)")
+    return ok
+
+
+def suffix_min_demand(q: list) -> tuple:
+    """suffix_rc[i] / suffix_rm[i]: min req_cores / req_mem over q[i:].
+    Any task's feasible set is a subset of this joint min-demand's, so
+    "no node hosts the min demand" proves the whole suffix blocked."""
+    rc = np.fromiter((t.req_cores for t in q), np.int64, len(q))
+    rm = np.fromiter((t.req_mem_gb for t in q), np.float64, len(q))
+    return (np.minimum.accumulate(rc[::-1])[::-1],
+            np.minimum.accumulate(rm[::-1])[::-1])
+
+
+# ---------------------------------------------------------------- protocol
+
+@dataclasses.dataclass(frozen=True)
+class ResourceRequest:
+    """What an attempt is allowed to consume.  ``cores`` bounds the cpu
+    affinity set a real backend grants; ``mem_gb`` is the request OOM
+    enforcement (when on) compares the sampled peak against."""
+    cores: int
+    mem_gb: float
+
+
+@dataclasses.dataclass
+class AttemptResult:
+    """One finished (or killed) attempt, as reported by ``poll()``.
+
+    Times are on the backend's monotonic clock; the control plane rebases
+    them onto its run-relative clock.  ``usage`` units match the simulator's
+    TaskTrace schema exactly — cpu in percent-of-one-core, mem in GB (peak
+    RSS), io in MB — so a TraceDB is label-ready regardless of which
+    backend fed it."""
+    instance: str
+    node: str
+    ok: bool
+    start_s: float
+    end_s: float
+    cpu_s: float = 0.0
+    peak_rss_gb: float = 0.0
+    io_mb: float = 0.0
+    oom: bool = False
+    detail: str = ""
+    extra: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def wall_s(self) -> float:
+        return max(self.end_s - self.start_s, 0.0)
+
+    def usage(self) -> dict:
+        """Measured usage in the simulator's TaskTrace units."""
+        wall = max(self.wall_s, 1e-9)
+        return {"cpu": 100.0 * self.cpu_s / wall,
+                "mem": self.peak_rss_gb,
+                "io": self.io_mb}
+
+
+class ExecutionBackend:
+    """Where attempts actually run.  Implementations override the four
+    calls below; ``is_simulated`` backends additionally expose ``.engine``
+    and are driven by the engine's own event loop instead of the generic
+    real-time loop (see module docstring)."""
+
+    is_simulated = False
+
+    def nodes(self) -> list:
+        """Node objects with at least ``.name``; real backends' nodes also
+        carry capacity (``spec()`` -> NodeSpec) for the placement mask."""
+        raise NotImplementedError
+
+    def launch(self, task: TaskInstance, node: str,
+               request: ResourceRequest) -> None:
+        raise NotImplementedError
+
+    def poll(self, timeout: Optional[float] = None) -> list:
+        """Attempts that ended since the last poll (possibly empty).
+        Blocks up to ``timeout`` seconds waiting for the first one."""
+        raise NotImplementedError
+
+    def kill(self, instance: str) -> None:
+        raise NotImplementedError
+
+    def close(self) -> None:  # optional; default no-op
+        pass
+
+
+class SimBackend(ExecutionBackend):
+    """The simulator as a backend: wraps an ``Engine`` verbatim.
+
+    The engine fuses decision and execution in one event-driven loop whose
+    float evaluation order is pinned by the equivalence suites, so this
+    wrapper does not re-route placement through the generic loop —
+    ``ControlPlane`` delegates to ``self.engine`` wholesale.  launch/poll/
+    kill are still implemented (against the wrapped engine's state) so
+    protocol-level tests can treat backends uniformly."""
+
+    is_simulated = True
+
+    def __init__(self, specs: list, scheduler, db: TraceDB,
+                 config=None, disabled_nodes: Optional[set] = None):
+        from repro.workflow.engine import Engine
+        self.engine = Engine(specs, scheduler, db, config,
+                             disabled_nodes=disabled_nodes)
+
+    @classmethod
+    def wrap(cls, engine) -> "SimBackend":
+        be = cls.__new__(cls)
+        be.engine = engine
+        return be
+
+    def nodes(self) -> list:
+        return list(self.engine.nodes.values())
+
+    def launch(self, task, node, request):
+        self.engine._start(task, node)
+
+    def poll(self, timeout=None):
+        return []   # the engine's own loop retires attempts
+
+    def kill(self, instance):
+        t = self.engine.running.get(instance)
+        if t is not None:
+            self.engine._kill(t, requeue=False, reason="killed")
+
+
+def make_backend(kind: str, **kw) -> ExecutionBackend:
+    """Backend factory: ``"sim"`` (specs/scheduler/db/config) or ``"local"``
+    (nodes/runner/... — see ``jobmanager.LocalProcessBackend``)."""
+    if kind == "sim":
+        return SimBackend(**kw)
+    if kind == "local":
+        from repro.workflow.jobmanager import LocalProcessBackend
+        return LocalProcessBackend(**kw)
+    raise ValueError(f"unknown backend kind: {kind!r}")
+
+
+# ------------------------------------------------------------ control plane
+
+@dataclasses.dataclass
+class ControlPlaneConfig:
+    """Policy knobs for the real-time loop (the sim path keeps its policy
+    in ``EngineConfig``; this config is ignored there)."""
+    placement_path: str = "auto"     # same semantics as EngineConfig
+    max_task_retries: int = 2        # non-OOM failures before permanent fail
+    max_oom_retries: int = 2         # OOM escalations before permanent fail
+    mem_escalation: float = 2.0      # request multiplier on OOM retry
+    poll_interval_s: float = 0.05    # backend poll granularity
+    max_wall_s: Optional[float] = None   # hard run deadline (None = off)
+
+
+class ControlPlane:
+    """Backend-agnostic decision loop.
+
+    Sim backends delegate to the wrapped engine (bit-for-bit, see module
+    docstring).  Real backends run the wall-clock loop: promote ready
+    tasks, order the queue, place through the array/dict scheduler seam
+    over a real feasibility mask, launch, poll, ingest measured usage into
+    the TraceDB, and apply the retry/OOM policy."""
+
+    def __init__(self, backend: ExecutionBackend, scheduler=None,
+                 db: Optional[TraceDB] = None,
+                 config: Optional[ControlPlaneConfig] = None):
+        self.backend = backend
+        self.cfg = ControlPlaneConfig() if config is None else config
+        self._engine = backend.engine if backend.is_simulated else None
+        if self._engine is not None:
+            self.scheduler = self._engine.scheduler
+            self.db = self._engine.db
+            return
+        if scheduler is None or db is None:
+            raise ValueError("real backends need an explicit scheduler + db")
+        self.scheduler = scheduler
+        self.db = db
+        from repro.workflow.engine import SimNode, _NodeArrays
+        specs = [n.spec() if callable(getattr(n, "spec", None)) else n.spec
+                 for n in backend.nodes()]
+        if not specs:
+            raise ValueError("backend exposes no nodes")
+        self._na = _NodeArrays(specs, bw_exp=0.0)
+        self.nodes = {s.name: SimNode(s, self._na, i)
+                      for i, s in enumerate(specs)}
+        self._use_array = detect_array_path(scheduler,
+                                            self.cfg.placement_path)
+        if self._use_array:
+            scheduler.bind_cluster(self._na, self.nodes)
+        self.queue: list[TaskInstance] = []
+        self.running: dict[str, TaskInstance] = {}
+        self.done: dict[str, TaskInstance] = {}
+        self.all_tasks: dict[str, TaskInstance] = {}
+        self.assignments: list[tuple] = []
+        self.assignment_log: list[AssignmentRecord] = []
+        self.retry_stats = {"oom_retries": 0, "task_retries": 0,
+                            "failures": 0}
+        self._seq: dict[str, int] = {}
+        self._seq_next = 0
+        self._deps_left: dict[str, int] = {}
+        self._dependents: dict[str, list] = defaultdict(list)
+        self._ready_batch: list[str] = []
+        self._arrivals: list[tuple] = []   # (submit_t, seq, instance)
+        self._unfinished = 0
+        self._max_end = 0.0
+        self._t0: Optional[float] = None
+
+    # ------------------------------------------------------------- sim path
+    @property
+    def engine(self):
+        """The wrapped simulator, when the backend is simulated."""
+        return self._engine
+
+    def snapshot(self) -> bytes:
+        if self._engine is None:
+            raise ValueError("snapshot/restore is a simulator feature")
+        return self._engine.snapshot()
+
+    # ------------------------------------------------------------ submission
+    def submit(self, spec: WorkflowSpec, run_id: int, seed: int = 0,
+               at: float = 0.0, input_scale: float = 1.0,
+               tenant: str = "default", prefix: Optional[str] = None):
+        """Same contract as ``Engine.submit`` (``at`` is seconds after
+        ``run()`` starts on the real path)."""
+        if self._engine is not None:
+            return self._engine.submit(spec, run_id, seed, at, input_scale,
+                                       tenant, prefix)
+        for inst in instantiate(spec, run_id, seed, input_scale):
+            inst.submit_t = at
+            inst.tenant = tenant
+            if prefix is not None:
+                inst.instance = f"{prefix}/{inst.instance}"
+                inst.deps = tuple(f"{prefix}/{d}" for d in inst.deps)
+            if inst.instance not in self._seq:
+                self._seq[inst.instance] = self._seq_next
+                self._seq_next += 1
+            self.all_tasks[inst.instance] = inst
+
+    # ------------------------------------------------------------- decisions
+    def _prepare(self):
+        self._deps_left = {}
+        self._dependents = defaultdict(list)
+        self._ready_batch = []
+        self._arrivals = []
+        for iid, t in self.all_tasks.items():
+            if t.state != "pending":
+                continue
+            left = 0
+            for d in t.deps:
+                if d not in self.done:
+                    left += 1
+                    self._dependents[d].append(iid)
+            self._deps_left[iid] = left
+            if left == 0:
+                if t.submit_t <= 0.0:
+                    self._ready_batch.append(iid)
+                else:
+                    heapq.heappush(self._arrivals,
+                                   (t.submit_t, self._seq[iid], iid))
+        self._unfinished = sum(1 for t in self.all_tasks.values()
+                               if t.state not in ("done", "killed"))
+
+    def _now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def _promote_ready(self):
+        now = self._now()
+        while self._arrivals and self._arrivals[0][0] <= now:
+            self._ready_batch.append(heapq.heappop(self._arrivals)[2])
+        if not self._ready_batch:
+            return
+        batch = sorted(set(self._ready_batch), key=self._seq.__getitem__)
+        self._ready_batch.clear()
+        for iid in batch:
+            t = self.all_tasks[iid]
+            if t.state == "pending":
+                t.state = "ready"
+                self.queue.append(t)
+
+    def _place(self) -> int:
+        """One placement pass over the ordered queue; returns the number of
+        attempts launched.  Real clusters are small (the mask is a handful
+        of nodes), so masks are computed per task — the suffix-min blocked
+        early-exit still bounds saturated passes."""
+        na = self._na
+        q = self.scheduler.order(self.queue, self.db)
+        still: list[TaskInstance] = []
+        launched = 0
+        suffix_rc = suffix_rm = None
+        nq = len(q)
+        k = 0
+        while k < nq:
+            task = q[k]
+            mask = na.feasible_mask(task.req_cores, task.req_mem_gb)
+            if self._use_array:
+                node_i = self.scheduler.select_node_idx(
+                    task, mask, self.db) if mask.any() else None
+                node = None if node_i is None else na.names[node_i]
+            else:
+                feas = dict(zip(na.names, mask.tolist()))
+                node = self.scheduler.select_node(
+                    task, self.nodes, feas, self.db)
+            if node is None:
+                still.append(task)
+                if suffix_rc is None:
+                    suffix_rc, suffix_rm = suffix_min_demand(q)
+                if k + 1 < nq and not na.feasible_mask(
+                        suffix_rc[k + 1], suffix_rm[k + 1]).any():
+                    still.extend(q[k + 1:])
+                    break
+            else:
+                self._launch(task, node)
+                launched += 1
+            k += 1
+        self.queue = still
+        na.mask_dirty.clear()
+        return launched
+
+    def _launch(self, task: TaskInstance, node: str):
+        na = self._na
+        i = na.index[node]
+        na.free_cores[i] -= task.req_cores
+        na.free_mem[i] -= task.req_mem_gb
+        na.n_running[i] += 1
+        self.nodes[node].running.add(task.instance)
+        task.state = "running"
+        task.node = node
+        task.start_t = self._now()
+        self.running[task.instance] = task
+        self.backend.launch(task, node,
+                            ResourceRequest(task.req_cores, task.req_mem_gb))
+
+    def _release(self, task: TaskInstance):
+        na = self._na
+        i = na.index[task.node]
+        na.free_cores[i] += task.req_cores
+        na.free_mem[i] += task.req_mem_gb
+        na.n_running[i] -= 1
+        self.nodes[task.node].running.discard(task.instance)
+        self.running.pop(task.instance, None)
+
+    def _on_done(self, instance: str):
+        now = self._now()
+        for d in self._dependents.get(instance, ()):
+            self._deps_left[d] -= 1
+            if self._deps_left[d] == 0:
+                t = self.all_tasks[d]
+                if t.state == "pending":
+                    if t.submit_t <= now:
+                        self._ready_batch.append(d)
+                    else:
+                        heapq.heappush(self._arrivals,
+                                       (t.submit_t, self._seq[d], d))
+
+    def _cancel_downstream(self, instance: str):
+        now = self._now()
+        stack = [instance]
+        while stack:
+            for d in self._dependents.get(stack.pop(), ()):
+                t = self.all_tasks[d]
+                if t.state == "pending":
+                    t.state = "killed"
+                    self._unfinished -= 1
+                    self.assignment_log.append(AssignmentRecord(
+                        t.instance, t.name, t.workflow, t.run_id, t.tenant,
+                        "", now, now, t.req_cores, t.req_mem_gb,
+                        t.submit_t, completed=False, used_mem_gb=0.0,
+                        outcome="cancelled"))
+                    stack.append(d)
+
+    def _ingest(self, task: TaskInstance, r: AttemptResult):
+        """Completed attempt: log, trace, promote dependents."""
+        task.state = "done"
+        task.end_t = self._now()
+        self.done[task.instance] = task
+        self.assignments.append(
+            (task.name, task.node, task.start_t, task.end_t))
+        self.assignment_log.append(AssignmentRecord(
+            task.instance, task.name, task.workflow, task.run_id,
+            task.tenant, task.node, task.start_t, task.end_t,
+            task.req_cores, task.req_mem_gb, task.submit_t, completed=True,
+            used_mem_gb=r.peak_rss_gb, outcome="done"))
+        self.db.add(TaskTrace(task.workflow, task.name, task.instance,
+                              task.run_id, task.node, r.wall_s, r.usage(),
+                              tenant=task.tenant))
+        self._unfinished -= 1
+        if task.end_t > self._max_end:
+            self._max_end = task.end_t
+        self._on_done(task.instance)
+
+    def _retry(self, task: TaskInstance, r: AttemptResult):
+        """Failed attempt: log the partial service, then apply the policy —
+        OOM failures escalate the request (engine semantics: escalation is
+        progress, so it consumes ``attempt``, not the fault budget);
+        everything else consumes ``fault_retries``.  Budget exhaustion
+        fails the instance permanently and cancels its downstream."""
+        outcome = "oom" if r.oom else "task-failure"
+        self.assignment_log.append(AssignmentRecord(
+            task.instance, task.name, task.workflow, task.run_id,
+            task.tenant, task.node, task.start_t, self._now(),
+            task.req_cores, task.req_mem_gb, task.submit_t, completed=False,
+            used_mem_gb=r.peak_rss_gb, outcome=outcome))
+        if r.oom:
+            task.attempt += 1
+            exhausted = task.attempt > self.cfg.max_oom_retries
+            if not exhausted:
+                mem_cap = float(self._na.mem_gb.max())
+                task.req_mem_gb = min(
+                    mem_cap, max(task.req_mem_gb * self.cfg.mem_escalation,
+                                 r.peak_rss_gb * 1.1))
+                self.retry_stats["oom_retries"] += 1
+        else:
+            task.fault_retries += 1
+            exhausted = task.fault_retries > self.cfg.max_task_retries
+            if not exhausted:
+                self.retry_stats["task_retries"] += 1
+        if exhausted:
+            task.state = "killed"
+            self._unfinished -= 1
+            self.retry_stats["failures"] += 1
+            self.assignment_log.append(AssignmentRecord(
+                task.instance, task.name, task.workflow, task.run_id,
+                task.tenant, "", self._now(), self._now(), task.req_cores,
+                task.req_mem_gb, task.submit_t, completed=False,
+                used_mem_gb=0.0,
+                outcome="oom-fail" if r.oom else "fault-fail"))
+            self._cancel_downstream(task.instance)
+        else:
+            task.state = "ready"
+            task.node = None
+            self.queue.append(task)
+
+    def _on_result(self, r: AttemptResult):
+        task = self.running.get(r.instance)
+        if task is None:
+            return   # already retired (e.g. killed by the deadline sweep)
+        self._release(task)
+        if r.ok:
+            self._ingest(task, r)
+        else:
+            self._retry(task, r)
+
+    # --------------------------------------------------------------- driver
+    def run(self, max_wall_s: Optional[float] = None) -> dict:
+        """Drive all submitted work to completion against the backend.
+
+        Returns the engine-shaped result dict ``{"makespan", "assignments"}``
+        (makespan in wall seconds since this call for real backends)."""
+        if self._engine is not None:
+            return self._engine.run()
+        cap = max_wall_s if max_wall_s is not None else self.cfg.max_wall_s
+        self._t0 = time.monotonic()
+        self._prepare()
+        while self._unfinished > 0:
+            self._promote_ready()
+            launched = self._place()
+            if not self.running:
+                if self._unfinished == 0:
+                    break
+                if self._arrivals:
+                    delay = self._arrivals[0][0] - self._now()
+                    if delay > 0:
+                        time.sleep(min(delay, self.cfg.poll_interval_s))
+                    continue
+                if launched == 0:
+                    # nothing running, nothing placeable, nothing arriving:
+                    # the run can never make progress again
+                    names = [t.instance for t in self.queue][:5]
+                    raise RuntimeError(
+                        f"tasks stuck with no feasible node: {names or '?'}")
+                continue
+            for r in self.backend.poll(timeout=self.cfg.poll_interval_s):
+                self._on_result(r)
+            if cap is not None and self._now() > cap:
+                for iid in list(self.running):
+                    self.backend.kill(iid)
+                raise RuntimeError(
+                    f"control plane exceeded max_wall_s={cap}")
+        return {"makespan": self._max_end, "assignments": self.assignments,
+                "paused": False}

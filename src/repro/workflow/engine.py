@@ -102,6 +102,7 @@ from repro.core.prediction import (PredictionConfig, PredictionRecord,
                                    make_predictor)
 from repro.core.profiler import NodeSpec
 from repro.core.sizing import SizingConfig, make_sizer
+from repro.workflow.controlplane import detect_array_path, suffix_min_demand
 from repro.workflow.dag import (TaskInstance, WorkflowSpec, instantiate,
                                 stable_seed)
 from repro.workflow.faults import FaultConfig, FaultModel
@@ -240,6 +241,15 @@ class SimNode:
 
 @dataclasses.dataclass
 class EngineConfig:
+    # Which execution backend this run is meant for.  The Engine class IS
+    # the simulated backend ("sim", the default and the only value it
+    # accepts); real execution goes through the control-plane split —
+    # ``repro.workflow.controlplane.ControlPlane`` + ``make_backend`` (e.g.
+    # "local" -> ``jobmanager.LocalProcessBackend``).  The field exists so
+    # configs are self-describing about which layer they drive and so a
+    # config written for a real backend fails loudly here instead of
+    # silently simulating.
+    backend: str = "sim"
     speculation: bool = False
     speculation_factor: float = 1.8   # relaunch if runtime > factor * p95
     # Cancel the losing half of a speculative pair while it is still
@@ -298,6 +308,11 @@ class Engine:
         # one config per engine: the seed's `config=EngineConfig()` default
         # was a shared mutable instance across every default-configured run
         self.cfg = EngineConfig() if config is None else config
+        if self.cfg.backend != "sim":
+            raise ValueError(
+                f"EngineConfig.backend={self.cfg.backend!r}: the Engine is "
+                "the simulated backend; run real backends through "
+                "repro.workflow.controlplane.ControlPlane/make_backend")
         self._na = _NodeArrays(specs, self.cfg.bw_exp)
         self.nodes = {s.name: SimNode(s, self._na, i)
                       for i, s in enumerate(specs)}
@@ -981,7 +996,8 @@ class Engine:
         `submit()` calls resolve exactly as the seed's per-event rescan did.
         """
         self._spec_on = self.cfg.speculation   # live config, per run
-        self._use_array = self._detect_array_path()
+        self._use_array = detect_array_path(self.scheduler,
+                                            self.cfg.placement_path)
         if self._use_array:
             self.scheduler.bind_cluster(self._na, self.nodes)
         self._arm_prediction()
@@ -1053,38 +1069,6 @@ class Engine:
             tier = {m: i for i, m in enumerate(machines)}
             self._pred_group = {name: tier[sn.spec.machine]
                                 for name, sn in self.nodes.items()}
-
-    def _detect_array_path(self) -> bool:
-        """Feature-detect the scheduler side of the array protocol.
-
-        A scheduler serves the array path when it opts in
-        (``supports_array_placement``) and exposes both hooks — and, for
-        subclasses, when ``select_node`` was not overridden *deeper* in the
-        MRO than ``select_node_idx`` (customized dict semantics without an
-        array twin must win, not be bypassed).  ``placement_path="dict"``
-        forces the fallback; ``"array"`` raises instead of silently
-        degrading.
-        """
-        mode = self.cfg.placement_path
-        if mode not in ("auto", "array", "dict"):
-            raise ValueError(f"unknown placement_path: {mode!r}")
-        if mode == "dict":
-            return False
-        sched = self.scheduler
-        ok = (getattr(sched, "supports_array_placement", False)
-              and callable(getattr(sched, "select_node_idx", None))
-              and callable(getattr(sched, "bind_cluster", None)))
-        if ok:
-            mro = type(sched).__mro__
-            depth = lambda attr: next(
-                (i for i, c in enumerate(mro) if attr in c.__dict__),
-                len(mro))
-            ok = depth("select_node_idx") <= depth("select_node")
-        if not ok and mode == "array":
-            raise ValueError(
-                f"scheduler {getattr(sched, 'name', sched)!r} cannot serve "
-                "placement_path='array' (no select_node_idx fast path)")
-        return ok
 
     def _promote_ready(self):
         while self._arrivals and self._arrivals[0][0] <= self.t:
@@ -1187,7 +1171,7 @@ class Engine:
             if node_i is None:
                 still.append(task)
                 if suffix_rc is None:
-                    suffix_rc, suffix_rm = self._suffix_min_demand(q)
+                    suffix_rc, suffix_rm = suffix_min_demand(q)
                 if k + 1 < nq:
                     nxt = (suffix_rc[k + 1], suffix_rm[k + 1])
                     # the common saturated case: the suffix min IS this
@@ -1208,16 +1192,6 @@ class Engine:
                     m[node_i] = na.feasible_at(node_i, rc, rm)
             k += 1
         self.queue = still
-
-    @staticmethod
-    def _suffix_min_demand(q: list) -> tuple:
-        """suffix_rc[i] / suffix_rm[i]: min req_cores / req_mem over q[i:].
-        Any task's feasible set is a subset of this joint min-demand's, so
-        "no node hosts the min demand" proves the whole suffix blocked."""
-        rc = np.fromiter((t.req_cores for t in q), np.int64, len(q))
-        rm = np.fromiter((t.req_mem_gb for t in q), np.float64, len(q))
-        return (np.minimum.accumulate(rc[::-1])[::-1],
-                np.minimum.accumulate(rm[::-1])[::-1])
 
     def _spec_p95_for(self, task: TaskInstance) -> float:
         """Current straggler threshold input for a running task: its p95

@@ -1,0 +1,263 @@
+"""Local subprocess JobManager — the first *real* ExecutionBackend
+(ROADMAP open item 4, COSMOS-style ``Job/models/jobmanager*`` analogue).
+
+``LocalProcessBackend`` runs every task attempt as a child process
+(``python -m repro.workflow.selfhost '<payload json>'``), carves the host
+into virtual nodes with disjoint cpu-affinity sets and per-node scratch
+directories, samples peak RSS while attempts run, and reports measured
+wall/cpu/RSS/io back to the control plane in the simulator's TaskTrace
+units — so Tarema's label/allocate phases run unchanged on real numbers.
+
+Heterogeneity on one container: ``local_nodes()`` splits the visible cores
+disjointly across nodes and alternates scratch between a RAM-backed volume
+(/dev/shm) and an on-disk tmpdir, so nodes genuinely differ in the one
+resource a shared-kernel host can differentiate (storage), while the
+Tarema grouping additionally separates them by their measured profiles.
+
+OOM semantics mirror the simulator's sizing model: an attempt whose
+*sampled peak RSS* exceeds its request fails with ``oom=True`` (killed
+in-flight when the parent-side sampler catches it, post-hoc otherwise) and
+the control plane retries it under an escalated request.  Enforcement is
+off by default — measurement is the point; enforcement is for the retry
+tests and for hosts where a runaway payload must not take the box down.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+from typing import Optional
+
+from repro.core.profiler import NodeSpec, _host_mem_gb
+from repro.workflow.controlplane import (AttemptResult, ExecutionBackend,
+                                         ResourceRequest)
+from repro.workflow.dag import TaskInstance
+from repro.workflow.selfhost import RESULT_TAG, make_runner
+
+_SRC_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+
+@dataclasses.dataclass
+class LocalNode:
+    """One virtual node of the local machine: a cpu-affinity set, a memory
+    budget, and a scratch volume."""
+    name: str
+    cpus: tuple = ()          # empty = inherit the parent's affinity
+    mem_gb: float = 1.0
+    scratch: str = ""         # payload + io working dir ("" = default tmp)
+    kind: str = "local"       # machine tier label (Tarema groups by it too)
+
+    def spec(self) -> NodeSpec:
+        """Capacity view for the control plane's feasibility mask.  The
+        speed columns are placeholders — real placement quality comes from
+        the *measured* NodeProfiles, not from this declaration."""
+        return NodeSpec(self.name, self.kind, max(len(self.cpus), 1),
+                        self.mem_gb, cpu_speed=1.0, mem_bw=1.0)
+
+
+def _ram_scratch() -> Optional[str]:
+    for cand in ("/dev/shm", "/run/shm"):
+        if os.path.isdir(cand) and os.access(cand, os.W_OK):
+            return cand
+    return None
+
+
+def local_nodes(n: int = 2, mem_fraction: float = 0.25,
+                scratch_root: Optional[str] = None) -> list:
+    """Carve the host into ``n`` virtual nodes: disjoint cpu chunks (every
+    node gets at least one core — on a single-core host they share it, and
+    heterogeneity comes from scratch placement alone) and alternating
+    RAM/disk scratch volumes."""
+    avail = sorted(os.sched_getaffinity(0)) if \
+        hasattr(os, "sched_getaffinity") else list(range(os.cpu_count() or 1))
+    per = max(len(avail) // n, 1)
+    mem = max((_host_mem_gb() or 4.0) * mem_fraction, 0.5)
+    ram = _ram_scratch()
+    disk = scratch_root or tempfile.gettempdir()
+    nodes = []
+    for i in range(n):
+        cpus = tuple(avail[i * per:(i + 1) * per]) or (avail[i % len(avail)],)
+        use_ram = ram is not None and i % 2 == 0
+        base = ram if use_ram else disk
+        scratch = tempfile.mkdtemp(prefix=f"tarema_node{i}_", dir=base)
+        nodes.append(LocalNode(
+            name=f"local{i}", cpus=cpus, mem_gb=mem, scratch=scratch,
+            kind="local-ram" if use_ram else "local-disk"))
+    return nodes
+
+
+@dataclasses.dataclass
+class _Attempt:
+    task: TaskInstance
+    node: LocalNode
+    request: ResourceRequest
+    proc: subprocess.Popen
+    start_s: float
+    argv: tuple = ()
+    execd: bool = False
+    peak_rss_gb: float = 0.0
+    killed_oom: bool = False
+
+
+def _has_execd(pid: int, argv: tuple) -> bool:
+    """True once /proc/<pid>/cmdline shows OUR argv.  Popen with ``cwd=``
+    takes CPython's fork+exec path, and between fork and exec the child's
+    /proc entries (VmHWM included) still describe the *parent's* address
+    space — sampling there reads the control plane's own multi-GB RSS as
+    the child's peak and OOM-kills every attempt.  The cmdline flips to
+    the spawned argv exactly at exec, so it gates when samples are real."""
+    try:
+        with open(f"/proc/{pid}/cmdline", "rb") as f:
+            cmd = tuple(c.decode("utf-8", "replace")
+                        for c in f.read().split(b"\0") if c)
+    except OSError:
+        return False
+    return cmd == argv
+
+
+def _read_vm_hwm_gb(pid: int) -> float:
+    """Parent-side peak-RSS sample of a live child (kB -> GB); 0.0 once the
+    process is gone."""
+    try:
+        with open(f"/proc/{pid}/status") as f:
+            for line in f:
+                if line.startswith("VmHWM:"):
+                    return int(line.split()[1]) / 1024.0 ** 2
+    except (OSError, ValueError):
+        pass
+    return 0.0
+
+
+class LocalProcessBackend(ExecutionBackend):
+    """Subprocess JobManager over the local machine's virtual nodes."""
+
+    def __init__(self, nodes: Optional[list] = None, runner=None,
+                 python: Optional[str] = None, enforce_requests: bool = False,
+                 sample_interval_s: float = 0.02, env: Optional[dict] = None):
+        self._nodes = list(nodes) if nodes is not None else local_nodes()
+        self._by_name = {n.name: n for n in self._nodes}
+        self.runner = runner if runner is not None else make_runner("quick")
+        self.python = python or sys.executable
+        self.enforce_requests = enforce_requests
+        self.sample_interval_s = sample_interval_s
+        self._env = dict(os.environ if env is None else env)
+        pp = self._env.get("PYTHONPATH", "")
+        if _SRC_ROOT not in pp.split(os.pathsep):
+            self._env["PYTHONPATH"] = (_SRC_ROOT + os.pathsep + pp) if pp \
+                else _SRC_ROOT
+        self._running: dict[str, _Attempt] = {}
+
+    # ----------------------------------------------------------- protocol
+    def nodes(self) -> list:
+        return list(self._nodes)
+
+    def nodespecs(self) -> list:
+        return [n.spec() for n in self._nodes]
+
+    def launch(self, task: TaskInstance, node: str,
+               request: ResourceRequest) -> None:
+        nd = self._by_name[node]
+        payload = dict(self.runner(task, nd))
+        payload.setdefault("cpus", list(nd.cpus))
+        if nd.scratch:
+            payload.setdefault("scratch", nd.scratch)
+        argv = [self.python, "-m", "repro.workflow.selfhost",
+                json.dumps(payload)]
+        proc = subprocess.Popen(
+            argv, stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+            env=self._env, cwd=nd.scratch or None)
+        self._running[task.instance] = _Attempt(
+            task, nd, request, proc, start_s=time.monotonic(),
+            argv=tuple(argv))
+
+    def poll(self, timeout: Optional[float] = None) -> list:
+        """Harvest every attempt that has ended; block up to ``timeout``
+        seconds for the first one.  Each pass also samples live peak RSS
+        (and, with ``enforce_requests``, kills over-request attempts)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            done = []
+            for iid, att in list(self._running.items()):
+                self._sample(att)
+                if att.proc.poll() is not None:
+                    del self._running[iid]
+                    done.append(self._harvest(att))
+            if done or not self._running:
+                return done
+            if deadline is not None and time.monotonic() >= deadline:
+                return []
+            time.sleep(self.sample_interval_s)
+
+    def kill(self, instance: str) -> None:
+        att = self._running.get(instance)
+        if att is not None and att.proc.poll() is None:
+            att.proc.kill()
+
+    def close(self) -> None:
+        for att in self._running.values():
+            if att.proc.poll() is None:
+                att.proc.kill()
+                att.proc.wait()
+        self._running.clear()
+
+    # ----------------------------------------------------------- internals
+    def _sample(self, att: _Attempt) -> None:
+        if att.proc.poll() is not None:
+            return
+        if not att.execd:
+            if not _has_execd(att.proc.pid, att.argv):
+                return          # pre-exec: /proc still shows the parent
+            att.execd = True
+        hwm = _read_vm_hwm_gb(att.proc.pid)
+        if hwm > att.peak_rss_gb:
+            att.peak_rss_gb = hwm
+        if self.enforce_requests and att.request.mem_gb > 0 \
+                and att.peak_rss_gb > att.request.mem_gb \
+                and not att.killed_oom:
+            att.killed_oom = True
+            att.proc.kill()
+
+    def _harvest(self, att: _Attempt) -> AttemptResult:
+        out, err = att.proc.communicate()
+        end_s = time.monotonic()
+        rc = att.proc.returncode
+        reported = None
+        for line in reversed((out or "").splitlines()):
+            if line.startswith(RESULT_TAG):
+                try:
+                    reported = json.loads(line[len(RESULT_TAG):])
+                except ValueError:
+                    pass
+                break
+        peak = att.peak_rss_gb
+        cpu_s = io_mb = 0.0
+        extra: dict = {}
+        if reported is not None:
+            peak = max(peak, float(reported.get("peak_rss_gb", 0.0)))
+            cpu_s = float(reported.get("cpu_s", 0.0))
+            io_mb = float(reported.get("io_mb", 0.0))
+            extra = reported.get("extra", {}) or {}
+        ok = rc == 0 and reported is not None
+        # OOM determination, mirroring the simulator's "sampled peak
+        # exceeds the sized request" model: the sampler's kill, a kernel
+        # OOM kill (SIGKILL), a python MemoryError — or, with enforcement
+        # on, a post-hoc peak > request even though the attempt finished
+        oom = att.killed_oom or "MemoryError" in (err or "")
+        if not oom and rc is not None and -rc == 9:
+            oom = True
+        if ok and self.enforce_requests and att.request.mem_gb > 0 \
+                and peak > att.request.mem_gb:
+            ok, oom = False, True
+        detail = "" if ok else (
+            "oom" if oom else
+            f"rc={rc}: {(err or '').strip().splitlines()[-1:] or ['?']}")
+        return AttemptResult(
+            instance=att.task.instance, node=att.node.name, ok=ok,
+            start_s=att.start_s, end_s=end_s, cpu_s=cpu_s,
+            peak_rss_gb=peak, io_mb=io_mb, oom=oom,
+            detail=str(detail), extra=extra)

@@ -1,0 +1,346 @@
+"""Self-hosted workload generator: the repo's own jobs as a heterogeneous
+DAG (ROADMAP open item 4, the real-execution backend's workload).
+
+The dormant two-thirds of the seed — models, kernels, train/launch, the
+data pipeline — become the task payloads: each abstract task in
+``selfhost_workflow()`` maps to a real function below with a distinct
+cpu/mem/io footprint, so Tarema's phase-2 labels have something genuine to
+measure.  ``LocalProcessBackend`` runs every attempt as
+
+    python -m repro.workflow.selfhost '<payload json>'
+
+where the payload is ``{"fn": <PAYLOADS key>, "kwargs": {...},
+"cpus": [...], "scratch": dir}``.  The child pins its cpu affinity, runs
+the payload, and prints one ``TAREMA_RESULT {json}`` line with measured
+wall/cpu/RSS/io so the parent never parses arbitrary stdout.
+
+Payload imports are deliberately lazy (inside each function): the child
+pays only for what its task actually uses — an io_scan never imports jax.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+from repro.workflow.dag import AbstractTask, TaskInstance, WorkflowSpec
+
+# last-stdout-line protocol between the child and the JobManager
+RESULT_TAG = "TAREMA_RESULT "
+
+
+# ----------------------------------------------------------------- payloads
+
+def _payload_probe(spin_ms: float = 20.0, rss_mb: float = 0.0,
+                   fail: bool = False, scratch: str = None) -> dict:
+    """Pure-python test workhorse: cheap spin, optional RSS ballast,
+    optional deliberate failure.  No numpy/jax import — a probe child
+    starts in ~50 ms, which keeps the control-plane tests fast."""
+    if fail:
+        raise RuntimeError("probe payload asked to fail")
+    ballast = bytearray(int(rss_mb * 1e6)) if rss_mb > 0 else bytearray()
+    # touch every page: fresh mmap'd zero pages aren't resident until
+    # written, and the whole point of the ballast is a measurable RSS
+    for i in range(0, len(ballast), 4096):
+        ballast[i] = 1
+    deadline = time.perf_counter() + spin_ms / 1e3
+    x = 1.0
+    while time.perf_counter() < deadline:
+        x = x * 1.0000001 % 10.0
+    return {"x": x, "ballast_mb": len(ballast) / 1e6}
+
+
+def _payload_cpu_burn(n: int = 384, reps: int = 6,
+                      scratch: str = None) -> dict:
+    """CPU-bound: repeated dense matmuls, tiny resident set."""
+    import numpy as np
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((n, n))
+    b = rng.standard_normal((n, n))
+    acc = 0.0
+    for _ in range(reps):
+        acc += float((a @ b)[0, 0])
+    return {"acc": acc, "flops": 2.0 * n ** 3 * reps}
+
+
+def _payload_mem_stream(mb: int = 64, reps: int = 12,
+                        scratch: str = None) -> dict:
+    """Memory-bound: large-array copies; RSS ~ 2x the working set."""
+    import numpy as np
+    n = int(mb * 1e6 // 8)
+    a = np.ones(n, np.float64)
+    b = np.empty_like(a)
+    for _ in range(reps):
+        np.copyto(b, a)
+        a[::4096] += 1.0
+    return {"sum_head": float(a[0] + b[0]), "working_set_mb": 2 * mb}
+
+
+def _payload_io_scan(mb: int = 32, reps: int = 2,
+                     scratch: str = None) -> dict:
+    """I/O-bound: write+fsync then read back files in the node's scratch
+    dir — the one payload whose cost depends on where the node's scratch
+    lives (tmpfs vs disk)."""
+    import tempfile
+    block = os.urandom(1 << 20)
+    total = 0
+    with tempfile.NamedTemporaryFile(dir=scratch or None) as f:
+        for _ in range(reps):
+            f.seek(0)
+            for _ in range(mb):
+                f.write(block)
+                total += len(block)
+            f.flush()
+            os.fsync(f.fileno())
+            f.seek(0)
+            while f.read(1 << 22):
+                pass
+            total += mb << 20
+    return {"io_mb": total / 1e6}
+
+
+def _payload_pipeline_stage(batches: int = 2, batch: int = 4, seq: int = 64,
+                            scratch: str = None) -> dict:
+    """A real ``data/pipeline.py`` stage: generate synthetic LM batches and
+    persist them to the node's scratch (the workflow's "staged input")."""
+    import numpy as np
+    from repro.configs import SHAPES, get_smoke_config
+    from repro.data.pipeline import SyntheticPipeline
+    cfg = get_smoke_config("llama3.2-3b")
+    pipe = SyntheticPipeline(cfg, SHAPES["train_4k"], seed=7,
+                             batch_override=batch, seq_override=seq)
+    written = 0
+    out = scratch or "."
+    for i in range(batches):
+        host = pipe._host_batch(i)   # numpy batch (no device transfer)
+        path = os.path.join(out, f"stage_{os.getpid()}_{i}.npz")
+        np.savez(path, **host)
+        written += os.path.getsize(path)
+        os.unlink(path)
+    return {"io_mb": written / 1e6, "batches": batches}
+
+
+def _payload_train_steps(steps: int = 2, batch: int = 2, seq: int = 32,
+                         arch: str = "llama3.2-3b",
+                         scratch: str = None) -> dict:
+    """The flagship workload: real optimizer steps of the tiny-config LM
+    (same stack as ``examples/train_lm.py``)."""
+    from repro.launch.train import main as train_main
+    out = train_main(["--preset", "tiny", "--arch", arch,
+                      "--steps", str(steps), "--batch", str(batch),
+                      "--seq", str(seq)])
+    return {"final_loss": out["final_loss"], "steps": out["steps"]}
+
+
+def _payload_node_profile(matmul_n: int = 256, stream_mb: int = 32,
+                          io_mb: int = 16, reps: int = 2,
+                          scratch: str = None) -> dict:
+    """Tarema phase 1 on the node itself: run the real microbenchmarks
+    under this attempt's affinity + scratch and return the feature dict."""
+    from repro.core.profiler import profile_local
+    p = profile_local(matmul_n=matmul_n, stream_mb=stream_mb, io_mb=io_mb,
+                      reps=reps, scratch=scratch)
+    return {"features": p.features, "static": p.static}
+
+
+PAYLOADS = {
+    "probe": _payload_probe,
+    "cpu_burn": _payload_cpu_burn,
+    "mem_stream": _payload_mem_stream,
+    "io_scan": _payload_io_scan,
+    "pipeline_stage": _payload_pipeline_stage,
+    "train_steps": _payload_train_steps,
+    "node_profile": _payload_node_profile,
+}
+
+
+# -------------------------------------------------------------- child entry
+
+def child_main(argv=None) -> int:
+    """Entry point of one task attempt (``python -m repro.workflow.selfhost
+    '<json>'``): pin affinity, run the payload, report measurements."""
+    spec = json.loads((argv if argv is not None else sys.argv[1:])[0])
+    cpus = spec.get("cpus")
+    if cpus and hasattr(os, "sched_setaffinity"):
+        try:
+            os.sched_setaffinity(0, set(int(c) for c in cpus))
+        except (OSError, ValueError):
+            pass   # affinity is best-effort (containers may restrict it)
+    fn = PAYLOADS[spec["fn"]]
+    kwargs = dict(spec.get("kwargs") or {})
+    if spec.get("scratch"):
+        kwargs.setdefault("scratch", spec["scratch"])
+    t0 = time.perf_counter()
+    extra = fn(**kwargs) or {}
+    wall = time.perf_counter() - t0
+    import resource
+    ru = resource.getrusage(resource.RUSAGE_SELF)
+    # peak RSS: prefer /proc/self/status VmHWM — it tracks THIS exec'd
+    # image (the kernel resets the mm high-water mark at exec), whereas
+    # ru_maxrss is fork-inherited on Linux: a child spawned by a multi-GB
+    # control plane reports the *parent's* peak, which the enforcement
+    # path would read as an OOM on every attempt
+    peak_gb = 0.0
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmHWM:"):
+                    peak_gb = int(line.split()[1]) / 1024.0 ** 2
+                    break
+    except (OSError, ValueError):
+        pass
+    if peak_gb <= 0.0:
+        # ru_maxrss fallback (KiB on Linux, bytes on macOS)
+        rss_div = 1024.0 ** 2 if sys.platform.startswith("linux") \
+            else 1024.0 ** 3
+        peak_gb = ru.ru_maxrss / rss_div
+    result = {
+        "wall_s": wall,
+        "cpu_s": ru.ru_utime + ru.ru_stime,
+        "peak_rss_gb": peak_gb,
+        # payloads that know their logical I/O report it; otherwise fall
+        # back to block-device counters (zero on tmpfs/cached reads)
+        "io_mb": float(extra.pop("io_mb",
+                                 (ru.ru_inblock + ru.ru_oublock) * 512 / 1e6)),
+        "extra": extra,
+    }
+    print(RESULT_TAG + json.dumps(result), flush=True)
+    return 0
+
+
+# ------------------------------------------------------------ the workload
+
+# abstract task -> payload function; work vectors describe the *intended*
+# footprint (they also drive instance jitter), labels come from measurement
+TASK_PAYLOAD = {
+    "ingest": "pipeline_stage",
+    "transform": "mem_stream",
+    "compute": "cpu_burn",
+    "train": "train_steps",
+    "report": "io_scan",
+    "node_profile": "node_profile",
+    "probe": "probe",
+}
+
+# payload kwargs per (task, scale); "quick" fits the CI smoke budget
+# (<= 8 tasks, <= 90 s wall on one slow core), "full" is the committed
+# bench, "test" is minuscule for the hermetic unit tests
+_SCALE_KW = {
+    "quick": {
+        "ingest": {"batches": 2, "batch": 4, "seq": 64},
+        "transform": {"mb": 48, "reps": 8},
+        "compute": {"n": 320, "reps": 5},
+        "train": {"steps": 2, "batch": 2, "seq": 32},
+        "report": {"mb": 24, "reps": 2},
+        "node_profile": {"matmul_n": 256, "stream_mb": 24, "io_mb": 12,
+                         "reps": 2},
+    },
+    "full": {
+        "ingest": {"batches": 4, "batch": 8, "seq": 128},
+        "transform": {"mb": 96, "reps": 12},
+        "compute": {"n": 448, "reps": 8},
+        "train": {"steps": 3, "batch": 2, "seq": 48},
+        "report": {"mb": 48, "reps": 3},
+        "node_profile": {"matmul_n": 384, "stream_mb": 48, "io_mb": 24,
+                         "reps": 3},
+    },
+    "test": {
+        "ingest": {"batches": 1, "batch": 2, "seq": 16},
+        "transform": {"mb": 8, "reps": 2},
+        "compute": {"n": 96, "reps": 2},
+        "train": {"steps": 1, "batch": 1, "seq": 16},
+        "report": {"mb": 2, "reps": 1},
+        "node_profile": {"matmul_n": 64, "stream_mb": 4, "io_mb": 2,
+                         "reps": 1},
+    },
+}
+
+
+def make_runner(scale: str = "quick", overrides: dict = None):
+    """Build the JobManager's task->payload mapping for one size class.
+
+    The returned callable takes ``(task, node)`` and yields the payload
+    spec dict the child executes; unknown task names fall back to their own
+    name as a PAYLOADS key (so tests can submit raw payload tasks)."""
+    if scale not in _SCALE_KW:
+        raise ValueError(f"unknown scale {scale!r} "
+                         f"(have {sorted(_SCALE_KW)})")
+    table = _SCALE_KW[scale]
+
+    def runner(task: TaskInstance, node) -> dict:
+        fn = TASK_PAYLOAD.get(task.name, task.name)
+        if fn not in PAYLOADS:
+            raise KeyError(f"no payload for task {task.name!r}")
+        kwargs = dict(table.get(task.name, {}))
+        if overrides and task.name in overrides:
+            kwargs.update(overrides[task.name])
+        return {"fn": fn, "kwargs": kwargs}
+
+    return runner
+
+
+def selfhost_workflow(quick: bool = True,
+                      include_train: bool = False) -> WorkflowSpec:
+    """The repo's own jobs as a DAG (Nextflow channel semantics from
+    ``dag.py``): stage data -> fan out into a memory-heavy transform and a
+    cpu-heavy compute (optionally real LM train steps) -> io-heavy report.
+    Quick mode is 6 instances (<= the CI smoke's 8-task budget)."""
+    fan = 2 if quick else 3
+    tasks = [
+        AbstractTask("ingest", 1, {"cpu": 2.0, "mem": 2.0, "io": 8.0},
+                     peak_mem_gb=0.3, req_cores=1, req_mem_gb=0.5),
+        AbstractTask("transform", fan, {"cpu": 3.0, "mem": 9.0, "io": 1.0},
+                     peak_mem_gb=0.4, deps=("ingest",),
+                     req_cores=1, req_mem_gb=0.5),
+        AbstractTask("compute", fan, {"cpu": 9.0, "mem": 2.0, "io": 1.0},
+                     peak_mem_gb=0.2, deps=("ingest",),
+                     req_cores=1, req_mem_gb=0.5),
+    ]
+    join = ["transform", "compute"]
+    if include_train:
+        tasks.append(AbstractTask(
+            "train", 1, {"cpu": 8.0, "mem": 6.0, "io": 1.0},
+            peak_mem_gb=0.8, deps=("ingest",), req_cores=1, req_mem_gb=1.0))
+        join.append("train")
+    tasks.append(AbstractTask(
+        "report", 1, {"cpu": 1.0, "mem": 1.0, "io": 9.0},
+        peak_mem_gb=0.2, deps=tuple(join), req_cores=1, req_mem_gb=0.5))
+    return WorkflowSpec("selfhost", tasks)
+
+
+def profile_backend(backend, scale: str = "quick") -> list:
+    """Tarema phase 1 against a real backend: run the ``node_profile``
+    payload on every node (sequentially, so measurements never contend)
+    and return one ``NodeProfile`` per node built from *measured*
+    features.  Static capacity comes from the node declaration."""
+    from repro.core.profiler import NodeProfile
+    from repro.workflow.controlplane import ResourceRequest
+    profiles = []
+    for nd in backend.nodes():
+        t = TaskInstance(
+            workflow="__profile__", run_id=0, name="node_profile",
+            instance=f"node_profile[{nd.name}]",
+            work={"cpu": 1.0, "mem": 1.0, "io": 1.0}, peak_mem_gb=0.5,
+            req_cores=1, req_mem_gb=0.5, deps=())
+        backend.launch(t, nd.name, ResourceRequest(1, 0.5))
+        results = []
+        deadline = time.monotonic() + 300.0
+        while not results and time.monotonic() < deadline:
+            results = backend.poll(timeout=1.0)
+        if not results or not results[0].ok:
+            detail = results[0].detail if results else "timeout"
+            raise RuntimeError(f"profiling {nd.name} failed: {detail}")
+        r = results[0]
+        feats = dict(r.extra["features"])
+        static = {"cores": max(len(getattr(nd, "cpus", ())), 1),
+                  "mem_gb": float(nd.mem_gb)}
+        static.update({k: v for k, v in r.extra.get("static", {}).items()
+                       if k not in static})
+        profiles.append(NodeProfile(node=nd.name, machine=nd.kind,
+                                    features=feats, static=static))
+    return profiles
+
+
+if __name__ == "__main__":
+    sys.exit(child_main())

@@ -1,0 +1,69 @@
+"""Hermetic coverage for the real host profiler (profiler.profile_local
+and its _bench_* helpers) — the real-execution backend's phase 1 depends
+on them.  Sizes are tiny so the whole file is bounded at a few seconds;
+assertions are about units and structure, not about this machine's speed.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.profiler import (FEATURES, NodeProfile, _bench_io,
+                                 _bench_matmul, _bench_memstream,
+                                 _host_mem_gb, profile_local)
+
+
+def test_bench_matmul_units():
+    g = _bench_matmul(n=64, reps=1)
+    # GFLOP/s of a 64x64 f32 matmul: positive, finite, and nothing a
+    # single CPU (or this container's accelerator stub) can't represent
+    assert np.isfinite(g) and 0.0 < g < 1e6
+
+
+def test_bench_memstream_units():
+    bw = _bench_memstream(mb=2, reps=1)
+    assert np.isfinite(bw) and 0.0 < bw < 1e5       # GB/s
+
+
+def test_bench_io_units_and_dir(tmp_path):
+    w, r = _bench_io(mb=1, dir=str(tmp_path))
+    assert np.isfinite(w) and np.isfinite(r)
+    assert 0.0 < w < 1e7 and 0.0 < r < 1e7          # MB/s
+    assert not list(tmp_path.iterdir())             # tmpfile cleaned up
+
+
+def test_bench_io_default_dir_still_works():
+    w, r = _bench_io(mb=1)
+    assert w > 0.0 and r > 0.0
+
+
+def test_profile_local_fields(tmp_path):
+    t0 = time.perf_counter()
+    p = profile_local(name="unit-host", machine="unit", matmul_n=64,
+                      stream_mb=2, io_mb=1, reps=1, scratch=str(tmp_path))
+    wall = time.perf_counter() - t0
+    assert wall < 60.0                               # bounded runtime
+    assert isinstance(p, NodeProfile)
+    assert p.node == "unit-host" and p.machine == "unit"
+    assert set(p.features) == set(FEATURES)
+    assert all(np.isfinite(v) and v > 0.0 for v in p.features.values())
+    assert p.vector().shape == (len(FEATURES),)
+    assert p.static["cores"] >= 1
+    # real memory capacity, not the old 0.0 placeholder (0.0 only where
+    # /proc/meminfo doesn't exist)
+    assert p.static["mem_gb"] > 0.0 or _host_mem_gb() == 0.0
+
+
+def test_profile_local_default_call_signature():
+    """examples/fleet_placement.py calls profile_local() bare — the new
+    parameters must all be optional."""
+    import inspect
+    sig = inspect.signature(profile_local)
+    required = [n for n, prm in sig.parameters.items()
+                if prm.default is inspect.Parameter.empty]
+    assert required == []
+
+
+def test_host_mem_gb_sane():
+    mem = _host_mem_gb()
+    assert 0.0 <= mem < 1e5

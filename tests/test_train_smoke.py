@@ -1,0 +1,55 @@
+"""The tiny train preset (examples/train_lm.py's fast path and the
+real-execution backend's flagship `train` payload): importable, builds,
+and steps — bounded to seconds on one CPU core.
+"""
+import importlib.util
+import os
+
+import jax
+import numpy as np
+
+from repro.configs import SHAPES
+from repro.data.pipeline import SyntheticPipeline
+from repro.launch.train import build, main
+from repro.models import model as M
+from repro.train.optimizer import make_optimizer
+from repro.train.step import make_train_step
+
+
+def test_tiny_preset_is_tiny():
+    cfg = build("tiny", "llama3.2-3b")
+    assert cfg.n_layers <= 2 and cfg.d_model <= 64 and cfg.vocab <= 256
+    small = build("small", "llama3.2-3b")
+    assert cfg.d_model < small.d_model
+
+
+def test_tiny_single_step():
+    cfg = build("tiny", "llama3.2-3b")
+    opt = make_optimizer(cfg.optimizer, lr=3e-3)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+    pipe = SyntheticPipeline(cfg, SHAPES["train_4k"], seed=0,
+                             batch_override=2, seq_override=16)
+    params = M.init_params(cfg, jax.random.key(0))
+    opt_state = opt.init(params)
+    params, opt_state, metrics = step_fn(params, opt_state, pipe.next())
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["loss"]) > 0.0
+
+
+def test_train_main_tiny_two_steps():
+    out = main(["--arch", "llama3.2-3b", "--preset", "tiny",
+                "--steps", "2", "--batch", "2", "--seq", "16",
+                "--log-every", "1"])
+    assert out["steps"] == 2
+    assert np.isfinite(out["final_loss"])
+
+
+def test_example_script_importable():
+    """examples/train_lm.py must at least import (its __main__ block only
+    runs when executed, so the import is side-effect free)."""
+    path = os.path.join(os.path.dirname(__file__), os.pardir, "examples",
+                        "train_lm.py")
+    spec = importlib.util.spec_from_file_location("train_lm_example", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    assert callable(mod.main)
