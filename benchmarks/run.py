@@ -27,8 +27,8 @@ def main() -> None:
                             fig3_workflow_profiles, fig45_runtimes,
                             fig67_usage, fig8_multiworkflow, kernel_bench,
                             perf_variants, prediction_bench, realexec_bench,
-                            roofline, sizing_bench, table4_profiling,
-                            tenancy_bench)
+                            recovery_bench, roofline, sizing_bench,
+                            table4_profiling, tenancy_bench)
     suites = {
         "table4": table4_profiling.main,
         "fig3": fig3_workflow_profiles.main,
@@ -45,6 +45,7 @@ def main() -> None:
         "engine": engine_bench.main,
         "ensemble": ensemble_bench.main,
         "realexec": realexec_bench.main,
+        "recovery": recovery_bench.main,
     }
     os.makedirs(RESULTS, exist_ok=True)
     all_out = {}

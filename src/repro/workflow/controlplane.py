@@ -55,6 +55,7 @@ from repro.core.fairness import AssignmentRecord
 from repro.core.monitor import TaskTrace, TraceDB
 from repro.core.profiler import NodeSpec
 from repro.workflow.dag import TaskInstance, WorkflowSpec, instantiate
+from repro.workflow.faults import attempt_timeout, backoff_delay
 
 
 # --------------------------------------------------------------- decision
@@ -133,6 +134,9 @@ class AttemptResult:
     oom: bool = False
     detail: str = ""
     extra: dict = dataclasses.field(default_factory=dict)
+    # which launch this result answers (monotonic per-plane id; -1 when the
+    # backend predates the id, in which case staleness can't be detected)
+    attempt_id: int = -1
 
     @property
     def wall_s(self) -> float:
@@ -160,7 +164,7 @@ class ExecutionBackend:
         raise NotImplementedError
 
     def launch(self, task: TaskInstance, node: str,
-               request: ResourceRequest) -> None:
+               request: ResourceRequest, attempt_id: int = -1) -> None:
         raise NotImplementedError
 
     def poll(self, timeout: Optional[float] = None) -> list:
@@ -170,6 +174,20 @@ class ExecutionBackend:
 
     def kill(self, instance: str) -> None:
         raise NotImplementedError
+
+    def reconcile(self, attempts: dict) -> tuple:
+        """Crash recovery: given attempt id -> info for launches that were
+        in flight when a previous control plane died, split them into
+        ``(adopted, lost)``.  Adopted attempts will surface through
+        ``poll()``; lost ones are gone and the plane charges them to the
+        fault budget.  Default: a backend with no persistent attempt state
+        loses everything."""
+        return {}, dict(attempts)
+
+    def forget(self, attempt_id: int) -> None:
+        """Drop any persistent per-attempt state (pidfiles, captured
+        output).  The plane calls this only after the attempt's retire
+        record is journaled — cleanup must never precede durability."""
 
     def close(self) -> None:  # optional; default no-op
         pass
@@ -202,7 +220,7 @@ class SimBackend(ExecutionBackend):
     def nodes(self) -> list:
         return list(self.engine.nodes.values())
 
-    def launch(self, task, node, request):
+    def launch(self, task, node, request, attempt_id: int = -1):
         self.engine._start(task, node)
 
     def poll(self, timeout=None):
@@ -237,6 +255,14 @@ class ControlPlaneConfig:
     mem_escalation: float = 2.0      # request multiplier on OOM retry
     poll_interval_s: float = 0.05    # backend poll granularity
     max_wall_s: Optional[float] = None   # hard run deadline (None = off)
+    # liveness: reap attempts exceeding max(floor, factor * p95) wall time
+    # (same policy as faults.FaultConfig's timeout regime; None = off)
+    timeout_factor: Optional[float] = None
+    timeout_floor_s: float = 30.0
+    # exponential-backoff requeue hold after a fault-budget retry
+    backoff_base_s: float = 0.5
+    backoff_factor: float = 2.0
+    backoff_cap_s: float = 30.0
 
 
 class ControlPlane:
@@ -250,11 +276,17 @@ class ControlPlane:
 
     def __init__(self, backend: ExecutionBackend, scheduler=None,
                  db: Optional[TraceDB] = None,
-                 config: Optional[ControlPlaneConfig] = None):
+                 config: Optional[ControlPlaneConfig] = None,
+                 wal=None):
         self.backend = backend
         self.cfg = ControlPlaneConfig() if config is None else config
         self._engine = backend.engine if backend.is_simulated else None
+        self._wal = None
         if self._engine is not None:
+            if wal is not None:
+                raise ValueError(
+                    "wal= is a real-backend feature; the simulator has its "
+                    "own bit-for-bit snapshot/restore (PR 6)")
             self.scheduler = self._engine.scheduler
             self.db = self._engine.db
             return
@@ -281,7 +313,9 @@ class ControlPlane:
         self.assignments: list[tuple] = []
         self.assignment_log: list[AssignmentRecord] = []
         self.retry_stats = {"oom_retries": 0, "task_retries": 0,
-                            "failures": 0}
+                            "timeouts": 0, "failures": 0,
+                            "stale_results": 0, "lost_attempts": 0,
+                            "adopted_attempts": 0}
         self._seq: dict[str, int] = {}
         self._seq_next = 0
         self._deps_left: dict[str, int] = {}
@@ -291,6 +325,24 @@ class ControlPlane:
         self._unfinished = 0
         self._max_end = 0.0
         self._t0: Optional[float] = None
+        # crash tolerance: per-launch attempt ids (stale-result detection +
+        # WAL identity) and backoff requeue holds
+        self._attempt_seq = 0
+        self._live_attempt: dict[str, int] = {}   # instance -> live attempt
+        self._holds: list[tuple] = []             # (release_t, seq, instance)
+        self._hold_until: dict[str, float] = {}
+        if wal is not None:
+            from repro.workflow.recovery import WriteAheadLog, trace_to_dict
+            self._wal = wal if isinstance(wal, WriteAheadLog) \
+                else WriteAheadLog(wal)
+            self._wal.append("config", cfg=dataclasses.asdict(self.cfg))
+            if self.db.records:
+                # history that predates this journal (warm p95s, shared
+                # label state) — snapshot it so recovery rebuilds the same
+                # TraceDB without replaying earlier runs
+                self._wal.append("attach", traces=[
+                    trace_to_dict(t) for t in self.db.records])
+            self._wal.flush(sync=True)
 
     # ------------------------------------------------------------- sim path
     @property
@@ -312,6 +364,12 @@ class ControlPlane:
         if self._engine is not None:
             return self._engine.submit(spec, run_id, seed, at, input_scale,
                                        tenant, prefix)
+        if self._wal is not None:
+            from repro.workflow.recovery import spec_to_dict
+            self._wal.append("submit", spec=spec_to_dict(spec),
+                             run_id=run_id, seed=seed, at=at,
+                             input_scale=input_scale, tenant=tenant,
+                             prefix=prefix, sync=True)
         for inst in instantiate(spec, run_id, seed, input_scale):
             inst.submit_t = at
             inst.tenant = tenant
@@ -414,8 +472,17 @@ class ControlPlane:
         task.node = node
         task.start_t = self._now()
         self.running[task.instance] = task
+        aid = self._attempt_seq
+        self._attempt_seq += 1
+        self._live_attempt[task.instance] = aid
+        # the launch record hits disk BEFORE the child exists: a crashed
+        # plane must know about every orphan it may have left behind
+        self._journal("launch", sync=True, t=task.start_t,
+                      instance=task.instance, attempt=aid, node=node,
+                      cores=task.req_cores, mem_gb=task.req_mem_gb)
         self.backend.launch(task, node,
-                            ResourceRequest(task.req_cores, task.req_mem_gb))
+                            ResourceRequest(task.req_cores, task.req_mem_gb),
+                            attempt_id=aid)
 
     def _release(self, task: TaskInstance):
         na = self._na
@@ -440,7 +507,12 @@ class ControlPlane:
                                        (t.submit_t, self._seq[d], d))
 
     def _cancel_downstream(self, instance: str):
+        """Kill the pending transitive downstream of a permanent failure;
+        returns ``(cancelled ids, their records)`` for the retire journal
+        entry (the cancellations are part of the same atomic transition)."""
         now = self._now()
+        cancelled: list[str] = []
+        recs: list[AssignmentRecord] = []
         stack = [instance]
         while stack:
             for d in self._dependents.get(stack.pop(), ()):
@@ -448,12 +520,49 @@ class ControlPlane:
                 if t.state == "pending":
                     t.state = "killed"
                     self._unfinished -= 1
-                    self.assignment_log.append(AssignmentRecord(
+                    rec = AssignmentRecord(
                         t.instance, t.name, t.workflow, t.run_id, t.tenant,
                         "", now, now, t.req_cores, t.req_mem_gb,
                         t.submit_t, completed=False, used_mem_gb=0.0,
-                        outcome="cancelled"))
+                        outcome="cancelled")
+                    self.assignment_log.append(rec)
+                    cancelled.append(d)
+                    recs.append(rec)
                     stack.append(d)
+        return cancelled, recs
+
+    # ------------------------------------------------------------ journaling
+    def _journal(self, kind: str, sync: bool = False, **fields):
+        if self._wal is not None:
+            self._wal.append(kind, sync=sync, **fields)
+
+    def _task_state(self, task: TaskInstance) -> dict:
+        """The mutable slice of a TaskInstance the WAL must carry: replayed
+        submissions re-derive everything else (``instantiate`` is pure)."""
+        return {"state": task.state, "attempt": task.attempt,
+                "fault_retries": task.fault_retries,
+                "req_mem_gb": task.req_mem_gb, "node": task.node,
+                "start_t": task.start_t, "end_t": task.end_t,
+                "hold_until": self._hold_until.get(task.instance)}
+
+    def _journal_retire(self, task: TaskInstance, attempt_id,
+                        record: AssignmentRecord, trace=None,
+                        extra=(), cancelled=()):
+        """One journal line for one attempt's end — the record(s), the
+        trace, the post-transition task state, and a stats snapshot travel
+        together so a torn write can never split an AssignmentRecord from
+        the state change it implies."""
+        if self._wal is None:
+            return
+        from repro.workflow.recovery import record_to_list, trace_to_dict
+        aid = None if attempt_id is None or attempt_id < 0 else attempt_id
+        self._wal.append(
+            "retire", t=self._now(), instance=task.instance, attempt=aid,
+            record=record_to_list(record),
+            trace=None if trace is None else trace_to_dict(trace),
+            task=self._task_state(task),
+            extra=[record_to_list(x) for x in extra],
+            cancelled=list(cancelled), stats=dict(self.retry_stats))
 
     def _ingest(self, task: TaskInstance, r: AttemptResult):
         """Completed attempt: log, trace, promote dependents."""
@@ -462,31 +571,40 @@ class ControlPlane:
         self.done[task.instance] = task
         self.assignments.append(
             (task.name, task.node, task.start_t, task.end_t))
-        self.assignment_log.append(AssignmentRecord(
+        rec = AssignmentRecord(
             task.instance, task.name, task.workflow, task.run_id,
             task.tenant, task.node, task.start_t, task.end_t,
             task.req_cores, task.req_mem_gb, task.submit_t, completed=True,
-            used_mem_gb=r.peak_rss_gb, outcome="done"))
-        self.db.add(TaskTrace(task.workflow, task.name, task.instance,
-                              task.run_id, task.node, r.wall_s, r.usage(),
-                              tenant=task.tenant))
+            used_mem_gb=r.peak_rss_gb, outcome="done")
+        self.assignment_log.append(rec)
+        trace = TaskTrace(task.workflow, task.name, task.instance,
+                          task.run_id, task.node, r.wall_s, r.usage(),
+                          tenant=task.tenant)
+        self.db.add(trace)
         self._unfinished -= 1
         if task.end_t > self._max_end:
             self._max_end = task.end_t
         self._on_done(task.instance)
+        self._journal_retire(task, r.attempt_id, rec, trace=trace)
 
-    def _retry(self, task: TaskInstance, r: AttemptResult):
+    def _retry(self, task: TaskInstance, r: AttemptResult,
+               outcome: Optional[str] = None):
         """Failed attempt: log the partial service, then apply the policy —
         OOM failures escalate the request (engine semantics: escalation is
         progress, so it consumes ``attempt``, not the fault budget);
-        everything else consumes ``fault_retries``.  Budget exhaustion
-        fails the instance permanently and cancels its downstream."""
-        outcome = "oom" if r.oom else "task-failure"
-        self.assignment_log.append(AssignmentRecord(
+        everything else — including timeouts and attempts lost to a plane
+        crash — consumes ``fault_retries`` and re-enters the queue after an
+        exponential-backoff hold.  Budget exhaustion fails the instance
+        permanently and cancels its downstream."""
+        outcome = outcome or ("oom" if r.oom else "task-failure")
+        rec = AssignmentRecord(
             task.instance, task.name, task.workflow, task.run_id,
             task.tenant, task.node, task.start_t, self._now(),
             task.req_cores, task.req_mem_gb, task.submit_t, completed=False,
-            used_mem_gb=r.peak_rss_gb, outcome=outcome))
+            used_mem_gb=r.peak_rss_gb, outcome=outcome)
+        self.assignment_log.append(rec)
+        extra: list = []
+        cancelled: list = []
         if r.oom:
             task.attempt += 1
             exhausted = task.attempt > self.cfg.max_oom_retries
@@ -503,29 +621,113 @@ class ControlPlane:
                 self.retry_stats["task_retries"] += 1
         if exhausted:
             task.state = "killed"
+            task.end_t = self._now()
             self._unfinished -= 1
             self.retry_stats["failures"] += 1
-            self.assignment_log.append(AssignmentRecord(
+            fail = AssignmentRecord(
                 task.instance, task.name, task.workflow, task.run_id,
                 task.tenant, "", self._now(), self._now(), task.req_cores,
                 task.req_mem_gb, task.submit_t, completed=False,
                 used_mem_gb=0.0,
-                outcome="oom-fail" if r.oom else "fault-fail"))
-            self._cancel_downstream(task.instance)
+                outcome="oom-fail" if r.oom else "fault-fail")
+            self.assignment_log.append(fail)
+            extra.append(fail)
+            cancelled, cancel_recs = self._cancel_downstream(task.instance)
+            extra.extend(cancel_recs)
         else:
             task.state = "ready"
             task.node = None
-            self.queue.append(task)
+            delay = 0.0 if r.oom else backoff_delay(
+                task.fault_retries, self.cfg.backoff_base_s,
+                self.cfg.backoff_factor, self.cfg.backoff_cap_s)
+            if delay > 0.0:
+                until = self._now() + delay
+                self._hold_until[task.instance] = until
+                heapq.heappush(self._holds,
+                               (until, self._seq[task.instance],
+                                task.instance))
+            else:
+                self.queue.append(task)
+        self._journal_retire(task, r.attempt_id, rec,
+                             extra=extra, cancelled=cancelled)
 
     def _on_result(self, r: AttemptResult):
         task = self.running.get(r.instance)
-        if task is None:
-            return   # already retired (e.g. killed by the deadline sweep)
+        live = self._live_attempt.get(r.instance)
+        if task is None or (r.attempt_id >= 0 and r.attempt_id != live):
+            # late or duplicate delivery: the instance was already retired
+            # (and possibly relaunched under a NEWER attempt id — retiring
+            # the new attempt on the old attempt's result would double-free
+            # its reservation and mis-trace its runtime)
+            self.retry_stats["stale_results"] += 1
+            if r.attempt_id >= 0 and r.attempt_id != live:
+                self.backend.forget(r.attempt_id)
+            return
         self._release(task)
+        self._live_attempt.pop(r.instance, None)
         if r.ok:
             self._ingest(task, r)
         else:
             self._retry(task, r)
+        if r.attempt_id >= 0:
+            self.backend.forget(r.attempt_id)
+
+    # ------------------------------------------------------------- liveness
+    def _release_holds(self):
+        """Move backoff-held retries whose hold expired back to the queue."""
+        now = self._now()
+        while self._holds and self._holds[0][0] <= now:
+            _, _, iid = heapq.heappop(self._holds)
+            if iid in self._hold_until:
+                del self._hold_until[iid]
+                t = self.all_tasks[iid]
+                if t.state == "ready":
+                    self.queue.append(t)
+
+    def _reap_timeouts(self):
+        """Kill attempts exceeding the faults.py timeout policy —
+        ``max(floor, factor * p95)`` once the TraceDB has history for the
+        task — and recycle them through the normal retry path.  The
+        backend's eventual delivery for the killed child is dropped as
+        stale (its attempt id is no longer live)."""
+        if self.cfg.timeout_factor is None or not self.running:
+            return
+        now = self._now()
+        for iid, task in list(self.running.items()):
+            limit = attempt_timeout(self.db, task.workflow, task.name,
+                                    self.cfg.timeout_factor,
+                                    self.cfg.timeout_floor_s)
+            if now - task.start_t <= limit:
+                continue
+            aid = self._live_attempt.pop(iid, -1)
+            self.backend.kill(iid)
+            self._release(task)
+            self.retry_stats["timeouts"] += 1
+            self._retry(task, AttemptResult(
+                instance=iid, node=task.node or "", ok=False,
+                start_s=0.0, end_s=0.0, detail="timeout", attempt_id=aid),
+                outcome="timeout")
+
+    def _deadline_kill(self, cap: float):
+        """max_wall_s exceeded: kill everything in flight, log the lost
+        service as ``completed=False, outcome="timeout"`` records (fairness
+        must see it), then raise."""
+        now = self._now()
+        for iid, task in list(self.running.items()):
+            aid = self._live_attempt.pop(iid, None)
+            self.backend.kill(iid)
+            self._release(task)
+            rec = AssignmentRecord(
+                task.instance, task.name, task.workflow, task.run_id,
+                task.tenant, task.node or "", task.start_t, now,
+                task.req_cores, task.req_mem_gb, task.submit_t,
+                completed=False, used_mem_gb=0.0, outcome="timeout")
+            self.assignment_log.append(rec)
+            task.state = "killed"
+            task.end_t = now
+            self._unfinished -= 1
+            self._journal_retire(task, aid, rec)
+        raise RuntimeError(f"control plane exceeded max_wall_s={cap}")
 
     # --------------------------------------------------------------- driver
     def run(self, max_wall_s: Optional[float] = None) -> dict:
@@ -536,32 +738,153 @@ class ControlPlane:
         if self._engine is not None:
             return self._engine.run()
         cap = max_wall_s if max_wall_s is not None else self.cfg.max_wall_s
-        self._t0 = time.monotonic()
+        if self._t0 is None:          # a recovered plane keeps its rebased
+            self._t0 = time.monotonic()   # clock (elapsed survives restart)
         self._prepare()
-        while self._unfinished > 0:
-            self._promote_ready()
-            launched = self._place()
-            if not self.running:
-                if self._unfinished == 0:
-                    break
-                if self._arrivals:
-                    delay = self._arrivals[0][0] - self._now()
-                    if delay > 0:
-                        time.sleep(min(delay, self.cfg.poll_interval_s))
+        try:
+            while self._unfinished > 0:
+                self._release_holds()
+                self._promote_ready()
+                launched = self._place()
+                if not self.running:
+                    if self._unfinished == 0:
+                        break
+                    wake = [h[0] for h in (self._arrivals[:1] or ())]
+                    if self._holds:
+                        wake.append(self._holds[0][0])
+                    if wake:
+                        delay = min(wake) - self._now()
+                        if delay > 0:
+                            time.sleep(min(delay, self.cfg.poll_interval_s))
+                        continue
+                    if launched == 0:
+                        # nothing running, placeable, held, or arriving:
+                        # the run can never make progress again
+                        names = [t.instance for t in self.queue][:5]
+                        raise RuntimeError(
+                            f"tasks stuck with no feasible node: "
+                            f"{names or '?'}")
                     continue
-                if launched == 0:
-                    # nothing running, nothing placeable, nothing arriving:
-                    # the run can never make progress again
-                    names = [t.instance for t in self.queue][:5]
-                    raise RuntimeError(
-                        f"tasks stuck with no feasible node: {names or '?'}")
+                for r in self.backend.poll(timeout=self.cfg.poll_interval_s):
+                    self._on_result(r)
+                self._reap_timeouts()
+                if cap is not None and self._now() > cap:
+                    self._deadline_kill(cap)
+            self._journal("finish", sync=True, t=self._now(),
+                          makespan=self._max_end)
+            return {"makespan": self._max_end,
+                    "assignments": self.assignments, "paused": False}
+        except BaseException:
+            # the raise path must not leak children / scratch, and the
+            # journal must be durable for whoever recovers the run
+            try:
+                self.backend.close()
+            finally:
+                if self._wal is not None:
+                    self._wal.flush(sync=True)
+            raise
+
+    # -------------------------------------------------------------- recovery
+    @classmethod
+    def recover(cls, wal_path: str, backend: ExecutionBackend, scheduler,
+                config: Optional[ControlPlaneConfig] = None) -> "ControlPlane":
+        """Rebuild a control plane from a write-ahead journal in a fresh
+        process.
+
+        The journal is replayed into queue/running/done/retry state
+        (including escalated requests, fault budgets, and backoff holds);
+        ``backend.reconcile`` then splits the in-flight launches into
+        adopted attempts (still-running or already-finished orphans —
+        they surface through ``poll()`` like any other attempt) and lost
+        ones, which are charged to the fault budget as ``node-crash``
+        retires.  Replay is a pure fold, so recovering twice from the same
+        final journal is a no-op.  The returned plane appends to the SAME
+        journal; call ``run()`` to drive the remaining work."""
+        from repro.workflow import recovery as _rec
+        state = _rec.replay(_rec.WriteAheadLog.read(wal_path))
+        db = TraceDB()
+        for tr in state.traces:
+            db.add(tr)
+        if config is None:
+            config = ControlPlaneConfig(**state.config) if state.config \
+                else ControlPlaneConfig()
+        plane = cls(backend, scheduler, db, config)
+        # 1. re-derive the DAG (instantiate is pure in (spec, run_id, seed))
+        for s in state.submits:
+            plane.submit(_rec.spec_from_dict(s["spec"]),
+                         run_id=int(s["run_id"]), seed=int(s["seed"]),
+                         at=float(s.get("at", 0.0)),
+                         input_scale=float(s.get("input_scale", 1.0)),
+                         tenant=s.get("tenant", "default"),
+                         prefix=s.get("prefix"))
+        # 2. overlay the journaled per-task state
+        for iid, ts in state.tasks.items():
+            t = plane.all_tasks.get(iid)
+            if t is None:
                 continue
-            for r in self.backend.poll(timeout=self.cfg.poll_interval_s):
-                self._on_result(r)
-            if cap is not None and self._now() > cap:
-                for iid in list(self.running):
-                    self.backend.kill(iid)
-                raise RuntimeError(
-                    f"control plane exceeded max_wall_s={cap}")
-        return {"makespan": self._max_end, "assignments": self.assignments,
-                "paused": False}
+            t.state = ts.get("state", t.state)
+            t.attempt = int(ts.get("attempt", t.attempt))
+            t.fault_retries = int(ts.get("fault_retries", t.fault_retries))
+            t.req_mem_gb = float(ts.get("req_mem_gb", t.req_mem_gb))
+            t.node = ts.get("node", t.node)
+            t.start_t = float(ts.get("start_t") or t.start_t)
+            t.end_t = float(ts.get("end_t") or t.end_t)
+            if t.state == "done":
+                plane.done[iid] = t
+        plane.assignment_log = list(state.log)
+        plane.assignments = [tuple(a) for a in state.assignments]
+        plane.retry_stats.update(state.stats)
+        plane._attempt_seq = state.attempt_seq
+        plane._max_end = state.max_end
+        plane._t0 = time.monotonic() - state.elapsed
+        plane._prepare()   # dependents map must exist before any _retry
+        # 3. reconcile in-flight launches against the living world
+        attempts = {int(aid): dict(info, task=plane.all_tasks.get(
+            info["instance"])) for aid, info in state.in_flight.items()}
+        adopted, lost = backend.reconcile(attempts)
+        plane.retry_stats["adopted_attempts"] += len(adopted)
+        plane.retry_stats["lost_attempts"] += len(lost)
+        na = plane._na
+        for aid, info in sorted(adopted.items()):
+            t = plane.all_tasks[info["instance"]]
+            t.state = "running"
+            t.node = info["node"]
+            t.req_cores = int(info["cores"])
+            t.req_mem_gb = float(info["mem_gb"])
+            t.start_t = float(info["t"])
+            i = na.index[t.node]
+            na.free_cores[i] -= t.req_cores
+            na.free_mem[i] -= t.req_mem_gb
+            na.n_running[i] += 1
+            plane.nodes[t.node].running.add(t.instance)
+            plane.running[t.instance] = t
+            plane._live_attempt[t.instance] = int(aid)
+        # 4. attach the journal (append mode — no header re-journaling)
+        plane._wal = _rec.WriteAheadLog(wal_path)
+        for aid, info in sorted(lost.items()):
+            t = plane.all_tasks.get(info["instance"])
+            if t is None or t.state != "running":
+                continue
+            t.node = info["node"]
+            t.start_t = float(info["t"])
+            plane._retry(t, AttemptResult(
+                instance=t.instance, node=info["node"], ok=False,
+                start_s=0.0, end_s=0.0, detail="lost-attempt",
+                attempt_id=int(aid)), outcome="node-crash")
+        # 5. requeue ready tasks, honouring journaled backoff holds
+        for iid, ts in state.tasks.items():
+            t = plane.all_tasks.get(iid)
+            if t is None or t.state != "ready" or t in plane.queue \
+                    or iid in plane._hold_until:
+                continue
+            hold = ts.get("hold_until")
+            if hold is not None and float(hold) > state.elapsed:
+                plane._hold_until[iid] = float(hold)
+                heapq.heappush(plane._holds,
+                               (float(hold), plane._seq[iid], iid))
+            else:
+                plane.queue.append(t)
+        plane._journal("recovered", sync=True, t=plane._now(),
+                       adopted=sorted(adopted), lost=sorted(lost),
+                       stats=dict(plane.retry_stats))
+        return plane

@@ -65,6 +65,34 @@ _SALT_DEGRADE = 0xDE64
 _SALT_ATTEMPT = 0x7F417
 
 
+# ---------------------------------------------------- shared policy helpers
+# Pure functions of (history, budgets) used identically by the simulator's
+# FaultModel and the real-execution control plane's liveness loop
+# (repro.workflow.controlplane) — one definition so the two paths can never
+# drift on what "timed out" or "backed off" means.
+
+def attempt_timeout(db, workflow: str, task_name: str,
+                    factor: Optional[float], floor_s: float) -> float:
+    """Wall-clock cap for one attempt: ``factor * p95`` of historic
+    runtimes (floored at ``floor_s``), +inf until history exists — a task
+    that was never observed cannot be distinguished from a long first run.
+    A genuine 0.0 p95 (instant tasks) still caps at the floor instead of
+    disabling the reaper."""
+    if factor is None:
+        return math.inf
+    p95 = db.runtime_quantile(workflow, task_name, 0.95, method="linear")
+    if p95 is None:
+        return math.inf
+    return max(floor_s, factor * p95)
+
+
+def backoff_delay(retries: int, base_s: float, factor: float,
+                  cap_s: float) -> float:
+    """Delay before retry number ``retries`` (1-based) re-queues:
+    ``base * factor**(retries-1)`` capped at ``cap_s``."""
+    return min(cap_s, base_s * factor ** (retries - 1))
+
+
 @dataclasses.dataclass
 class FaultConfig:
     """Engine-facing fault-injection knobs (``EngineConfig.faults``).
@@ -196,23 +224,15 @@ class FaultModel:
         return self.cfg.timeout_factor is not None
 
     def timeout_for(self, db, task) -> float:
-        """Wall-clock cap for one attempt: ``factor * p95`` of historic
-        runtimes (floored), +inf until history exists — a task that was
-        never observed cannot be distinguished from a long first run."""
-        if self.cfg.timeout_factor is None:
-            return math.inf
-        p95 = db.runtime_quantile(task.workflow, task.name, 0.95,
-                                  method="linear")
-        if p95 is None:            # no history at all -> can't bound the run;
-            return math.inf        # a genuine 0.0 p95 (instant tasks) must
-        # still cap the attempt at the floor, not disable the reaper
-        return max(self.cfg.timeout_floor_s, self.cfg.timeout_factor * p95)
+        """Wall-clock cap for one attempt (see ``attempt_timeout``)."""
+        return attempt_timeout(db, task.workflow, task.name,
+                               self.cfg.timeout_factor,
+                               self.cfg.timeout_floor_s)
 
     def backoff_delay(self, retries: int) -> float:
         """Delay before retry number ``retries`` (1-based) re-queues."""
-        return min(self.cfg.backoff_cap_s,
-                   self.cfg.backoff_base_s
-                   * self.cfg.backoff_factor ** (retries - 1))
+        return backoff_delay(retries, self.cfg.backoff_base_s,
+                             self.cfg.backoff_factor, self.cfg.backoff_cap_s)
 
 
 # ---------------------------------------------------------------- report

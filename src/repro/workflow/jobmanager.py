@@ -26,10 +26,12 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import signal
 import subprocess
 import sys
 import tempfile
 import time
+import types
 from typing import Optional
 
 from repro.core.profiler import NodeSpec, _host_mem_gb
@@ -102,6 +104,10 @@ class _Attempt:
     execd: bool = False
     peak_rss_gb: float = 0.0
     killed_oom: bool = False
+    attempt_id: int = -1
+    out_path: Optional[str] = None    # registry mode: stdout/stderr go to
+    err_path: Optional[str] = None    # files that survive a plane crash
+    adopted: bool = False
 
 
 def _has_execd(pid: int, argv: tuple) -> bool:
@@ -118,6 +124,78 @@ def _has_execd(pid: int, argv: tuple) -> bool:
     except OSError:
         return False
     return cmd == argv
+
+
+def _proc_stat(pid: int) -> Optional[tuple]:
+    """(state, starttime) from /proc/<pid>/stat — fields 3 and 22, parsed
+    after the comm parens so a ``)`` in the process name can't shift them.
+    None once the pid is gone."""
+    try:
+        with open(f"/proc/{pid}/stat", "rb") as f:
+            data = f.read().decode("ascii", "replace")
+        rest = data.rsplit(")", 1)[1].split()
+        return rest[0], int(rest[19])
+    except (OSError, ValueError, IndexError):
+        return None
+
+
+def _proc_starttime(pid: int) -> Optional[int]:
+    """Kernel start time (clock ticks since boot, /proc/<pid>/stat field
+    22) — the identity that survives where pids don't: a recycled pid
+    cannot reproduce the dead process's start tick, so
+    ``(pid, starttime)`` is safe to persist in the attempt registry and
+    re-check after a control-plane restart."""
+    st = _proc_stat(pid)
+    return None if st is None else st[1]
+
+
+def _proc_live_starttime(pid: int) -> Optional[int]:
+    """Like ``_proc_starttime`` but None for zombies: a zombie has finished
+    (its output files are complete) and will never run again, it just
+    hasn't been reaped — init reaps orphans promptly, but an adopter that
+    shares a live ancestor with the original spawner would otherwise wait
+    on the corpse forever."""
+    st = _proc_stat(pid)
+    return None if st is None or st[0] == "Z" else st[1]
+
+
+class _ExternalProc:
+    """Popen-alike for an adopted orphan (a child of the *crashed* plane,
+    not ours).  Liveness comes from /proc identity — pid + start tick, so
+    pid reuse never reads a stranger as our attempt — and the exit status
+    is unknowable (only a parent can reap it): ``returncode`` is reported
+    as 0 and success hinges entirely on the ``TAREMA_RESULT`` line in the
+    attempt's registry stdout file, exactly like a normal harvest."""
+
+    def __init__(self, pid: int, starttime: Optional[int]):
+        self.pid = pid
+        self._starttime = starttime
+        self.returncode: Optional[int] = None
+        if pid <= 0 or starttime is None:
+            self.returncode = 0          # already gone at adoption time
+
+    def _alive(self) -> bool:
+        return _proc_live_starttime(self.pid) == self._starttime
+
+    def poll(self) -> Optional[int]:
+        if self.returncode is None and not self._alive():
+            self.returncode = 0
+        return self.returncode
+
+    def wait(self, timeout: Optional[float] = None) -> int:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while self.poll() is None:
+            if deadline is not None and time.monotonic() >= deadline:
+                raise subprocess.TimeoutExpired("adopted-attempt", timeout)
+            time.sleep(0.02)
+        return self.returncode
+
+    def kill(self) -> None:
+        if self.poll() is None:
+            try:
+                os.kill(self.pid, signal.SIGKILL)
+            except OSError:
+                pass
 
 
 def _read_vm_hwm_gb(pid: int) -> float:
@@ -138,7 +216,8 @@ class LocalProcessBackend(ExecutionBackend):
 
     def __init__(self, nodes: Optional[list] = None, runner=None,
                  python: Optional[str] = None, enforce_requests: bool = False,
-                 sample_interval_s: float = 0.02, env: Optional[dict] = None):
+                 sample_interval_s: float = 0.02, env: Optional[dict] = None,
+                 registry_dir: Optional[str] = None):
         self._nodes = list(nodes) if nodes is not None else local_nodes()
         self._by_name = {n.name: n for n in self._nodes}
         self.runner = runner if runner is not None else make_runner("quick")
@@ -151,6 +230,12 @@ class LocalProcessBackend(ExecutionBackend):
             self._env["PYTHONPATH"] = (_SRC_ROOT + os.pathsep + pp) if pp \
                 else _SRC_ROOT
         self._running: dict[str, _Attempt] = {}
+        # crash-recovery registry: one pidfile + stdout/stderr file per
+        # attempt, under the run scratch, so a restarted control plane can
+        # re-attach to orphans (pipes die with the parent; files don't)
+        self.registry_dir = registry_dir
+        if registry_dir:
+            os.makedirs(registry_dir, exist_ok=True)
 
     # ----------------------------------------------------------- protocol
     def nodes(self) -> list:
@@ -160,7 +245,7 @@ class LocalProcessBackend(ExecutionBackend):
         return [n.spec() for n in self._nodes]
 
     def launch(self, task: TaskInstance, node: str,
-               request: ResourceRequest) -> None:
+               request: ResourceRequest, attempt_id: int = -1) -> None:
         nd = self._by_name[node]
         payload = dict(self.runner(task, nd))
         payload.setdefault("cpus", list(nd.cpus))
@@ -168,12 +253,121 @@ class LocalProcessBackend(ExecutionBackend):
             payload.setdefault("scratch", nd.scratch)
         argv = [self.python, "-m", "repro.workflow.selfhost",
                 json.dumps(payload)]
-        proc = subprocess.Popen(
-            argv, stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
-            env=self._env, cwd=nd.scratch or None)
+        out_path = err_path = None
+        if self.registry_dir and attempt_id >= 0:
+            out_path = self._att_path(attempt_id, "out")
+            err_path = self._att_path(attempt_id, "err")
+            with open(out_path, "wb") as out_f, \
+                    open(err_path, "wb") as err_f:
+                proc = subprocess.Popen(argv, stdout=out_f, stderr=err_f,
+                                        env=self._env,
+                                        cwd=nd.scratch or None)
+        else:
+            proc = subprocess.Popen(
+                argv, stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+                text=True, env=self._env, cwd=nd.scratch or None)
         self._running[task.instance] = _Attempt(
             task, nd, request, proc, start_s=time.monotonic(),
-            argv=tuple(argv))
+            argv=tuple(argv), attempt_id=attempt_id,
+            out_path=out_path, err_path=err_path)
+        if out_path is not None:
+            self._write_registry(task, nd, request, proc, attempt_id)
+
+    # --------------------------------------------------- attempt registry
+    def _att_path(self, attempt_id: int, ext: str) -> str:
+        return os.path.join(self.registry_dir, f"att{attempt_id}.{ext}")
+
+    def _write_registry(self, task, nd, request, proc, attempt_id) -> None:
+        """Persist the attempt's identity (atomic rename): enough for a
+        future plane to re-attach (pid + start tick + argv) or post-mortem
+        the child's stdout file."""
+        meta = {"attempt": attempt_id, "instance": task.instance,
+                "node": nd.name, "pid": proc.pid,
+                "starttime": _proc_starttime(proc.pid),
+                "argv": list(self._running[task.instance].argv),
+                "cores": request.cores, "mem_gb": request.mem_gb,
+                "start_unix": time.time()}
+        path = self._att_path(attempt_id, "json")
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(meta, f)
+        os.replace(tmp, path)
+
+    def forget(self, attempt_id: int) -> None:
+        """Drop an attempt's registry files.  Called by the control plane
+        AFTER the retire record is journaled — never at harvest time: a
+        crash between harvest and journal would otherwise leave an attempt
+        that is in-flight per the WAL but has no registry to reconcile
+        against, i.e. guaranteed loss."""
+        if not self.registry_dir or attempt_id < 0:
+            return
+        for ext in ("json", "out", "err"):
+            try:
+                os.unlink(self._att_path(attempt_id, ext))
+            except OSError:
+                pass
+
+    def reconcile(self, attempts: dict) -> tuple:
+        """Re-attach to orphaned attempts after a control-plane crash.
+
+        ``attempts`` maps attempt id -> info dict (``instance``, ``node``,
+        ``cores``, ``mem_gb``, optional ``task`` carrying the live
+        TaskInstance), i.e. the WAL's in-flight launches.  Returns
+        ``(adopted, lost)`` splitting those ids: adopted attempts are
+        children of the dead plane that are either still running (liveness
+        re-checked via pid + start tick, VmHWM sampling resumes) or
+        finished while orphaned (their registry stdout file already holds
+        the result line) — both surface through ``poll()`` like any other
+        attempt.  Lost attempts left no adoptable trace; the control plane
+        charges them to the fault-retry budget."""
+        adopted: dict = {}
+        lost: dict = {}
+        for aid, info in attempts.items():
+            aid = int(aid)
+            meta = self._read_registry(aid)
+            if meta is None:
+                lost[aid] = info
+                continue
+            inst = meta["instance"]
+            task = info.get("task") or types.SimpleNamespace(instance=inst)
+            nd = self._by_name.get(meta["node"])
+            if nd is None or inst in self._running:
+                lost[aid] = info
+                continue
+            pid, st = meta.get("pid"), meta.get("starttime")
+            alive = (pid is not None and st is not None
+                     and _proc_live_starttime(pid) == st)
+            if not alive and not self._has_result_line(aid):
+                lost[aid] = info       # dead without a result: gone for good
+                continue
+            proc = _ExternalProc(pid if alive else -1, st if alive else None)
+            start_s = time.monotonic() - max(
+                time.time() - float(meta.get("start_unix", time.time())), 0.0)
+            self._running[inst] = _Attempt(
+                task, nd, ResourceRequest(int(meta.get("cores", 1)),
+                                          float(meta.get("mem_gb", 0.0))),
+                proc, start_s=start_s, argv=tuple(meta.get("argv", ())),
+                attempt_id=aid, out_path=self._att_path(aid, "out"),
+                err_path=self._att_path(aid, "err"), adopted=True)
+            adopted[aid] = info
+        return adopted, lost
+
+    def _read_registry(self, attempt_id: int) -> Optional[dict]:
+        if not self.registry_dir:
+            return None
+        try:
+            with open(self._att_path(attempt_id, "json")) as f:
+                return json.load(f)
+        except (OSError, ValueError):
+            return None
+
+    def _has_result_line(self, attempt_id: int) -> bool:
+        try:
+            with open(self._att_path(attempt_id, "out"),
+                      encoding="utf-8", errors="replace") as f:
+                return any(line.startswith(RESULT_TAG) for line in f)
+        except OSError:
+            return False
 
     def poll(self, timeout: Optional[float] = None) -> list:
         """Harvest every attempt that has ended; block up to ``timeout``
@@ -223,7 +417,15 @@ class LocalProcessBackend(ExecutionBackend):
             att.proc.kill()
 
     def _harvest(self, att: _Attempt) -> AttemptResult:
-        out, err = att.proc.communicate()
+        if att.out_path is not None:
+            # registry mode: stdout/stderr live in files (they survive a
+            # plane crash where pipes would not); adopted orphans cannot be
+            # reaped, so for them the RESULT line *is* the exit status
+            att.proc.wait()
+            out = self._slurp(att.out_path)
+            err = self._slurp(att.err_path)
+        else:
+            out, err = att.proc.communicate()
         end_s = time.monotonic()
         rc = att.proc.returncode
         reported = None
@@ -260,4 +462,14 @@ class LocalProcessBackend(ExecutionBackend):
             instance=att.task.instance, node=att.node.name, ok=ok,
             start_s=att.start_s, end_s=end_s, cpu_s=cpu_s,
             peak_rss_gb=peak, io_mb=io_mb, oom=oom,
-            detail=str(detail), extra=extra)
+            detail=str(detail), extra=extra, attempt_id=att.attempt_id)
+
+    @staticmethod
+    def _slurp(path: Optional[str]) -> str:
+        if path is None:
+            return ""
+        try:
+            with open(path, encoding="utf-8", errors="replace") as f:
+                return f.read()
+        except OSError:
+            return ""

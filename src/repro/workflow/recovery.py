@@ -1,0 +1,489 @@
+"""Crash-tolerant real-execution control plane (ROADMAP robustness, real
+path): write-ahead journal, deterministic chaos backend, cross-process
+recovery driver.
+
+PR 6 gave the *simulator* bit-for-bit snapshot/restore; this module gives
+the PR 9 real-execution path the equivalent story.  A ``ControlPlane``
+driving real subprocesses journals every state transition to an
+append-only JSONL **write-ahead log**:
+
+  * ``config``  — the ControlPlaneConfig the run was started under
+  * ``attach``  — snapshot of any TraceDB records that predate the WAL
+                  (warm history shared across rounds)
+  * ``submit``  — the WorkflowSpec + instantiation parameters, so recovery
+                  re-derives the exact DAG (``instantiate`` is pure in
+                  (spec, run_id, seed))
+  * ``launch``  — one attempt started: instance, monotonic ``attempt`` id,
+                  node, and the request it ran under.  **fsync'd before the
+                  child spawns** — a crashed plane must know about every
+                  orphan it may have left behind
+  * ``retire``  — one attempt ended (done / oom / task-failure / timeout /
+                  node-crash): the verbatim ``AssignmentRecord`` (+ the
+                  permanent-failure and cancellation records it triggered),
+                  the ``TaskTrace`` for completions, the task's
+                  post-transition state (budgets, escalated request,
+                  backoff hold), and a retry-stats snapshot — all in ONE
+                  journal line, so a torn write can never split a record
+                  from the state change it implies
+  * ``finish``  — clean end of ``run()``
+
+``replay`` folds a journal back into the exact control-plane state
+(assignment log, TraceDB, task states, in-flight attempts), and
+``ControlPlane.recover`` rebuilds a plane from it in a fresh process: the
+backend's ``reconcile`` re-attaches attempts whose child processes are
+still alive (or finished while orphaned) and the rest are charged to the
+fault-retry budget with the PR 6 ``outcome`` vocabulary.  Replay is a pure
+fold, so recovering twice from the same final log is a no-op.
+
+``ChaosBackend`` makes every one of those paths testable on demand: a
+deterministic (crc32-seeded, pure per ``(instance, attempt ordinal)``)
+wrapper around a real backend that SIGKILLs attempts at a drawn fraction
+of their nominal runtime, hangs them (withholds their delivery so only the
+liveness reaper can save the run), delays and duplicates poll deliveries,
+and crashes the control-plane process itself at a scheduled wall time.
+
+``python -m repro.workflow.recovery '<driver json>'`` runs a full plane
+from a serialized description (nodes, workflow, chaos, WAL/registry
+paths); the recovery tests and ``benchmarks/recovery_bench.py`` use it as
+the sacrificial process that gets SIGKILLed mid-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import signal
+import sys
+import time
+from collections import defaultdict
+from typing import Optional
+
+import numpy as np
+
+from repro.core.fairness import AssignmentRecord
+from repro.core.monitor import TaskTrace
+from repro.core.seeding import stable_seed
+from repro.workflow.dag import AbstractTask, WorkflowSpec
+
+# salts for the chaos streams (arbitrary, fixed; disjoint from faults.py)
+_SALT_CHAOS_FAULT = 0xC805
+_SALT_CHAOS_DELIVERY = 0xD311
+
+
+# ------------------------------------------------------------ serialization
+
+def spec_to_dict(spec: WorkflowSpec) -> dict:
+    return dataclasses.asdict(spec)
+
+
+def spec_from_dict(d: dict) -> WorkflowSpec:
+    tasks = [AbstractTask(**{**t, "deps": tuple(t.get("deps", ()))})
+             for t in d["tasks"]]
+    return WorkflowSpec(d["name"], tasks)
+
+
+def record_to_list(r: AssignmentRecord) -> list:
+    return list(r)
+
+
+def record_from_list(xs: list) -> AssignmentRecord:
+    return AssignmentRecord(*xs)
+
+
+def trace_to_dict(t: TaskTrace) -> dict:
+    return dataclasses.asdict(t)
+
+
+def trace_from_dict(d: dict) -> TaskTrace:
+    return TaskTrace(**d)
+
+
+# ------------------------------------------------------------------- journal
+
+class WriteAheadLog:
+    """Append-only JSONL journal with batched fsync.
+
+    Every record is one JSON object on one line — the atomicity unit.  A
+    crash can tear at most the final line, which ``read`` drops (a torn
+    *interior* line means real corruption and raises).  ``append`` writes
+    through to the OS immediately (``flush``) and fsyncs either on demand
+    (``sync=True`` — launch records, clean finish) or whenever
+    ``fsync_interval_s`` has elapsed since the last fsync, so steady-state
+    retires cost one buffered write, not one disk barrier, each.
+    """
+
+    def __init__(self, path: str, fsync_interval_s: float = 0.2):
+        self.path = path
+        self.fsync_interval_s = fsync_interval_s
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        self._f = open(path, "a", encoding="utf-8")
+        self._last_fsync = time.monotonic()
+
+    def append(self, kind: str, sync: bool = False, **fields) -> None:
+        rec = {"k": kind}
+        rec.update(fields)
+        self._f.write(json.dumps(rec) + "\n")
+        self._f.flush()
+        now = time.monotonic()
+        if sync or now - self._last_fsync >= self.fsync_interval_s:
+            os.fsync(self._f.fileno())
+            self._last_fsync = now
+
+    def flush(self, sync: bool = True) -> None:
+        self._f.flush()
+        if sync:
+            os.fsync(self._f.fileno())
+            self._last_fsync = time.monotonic()
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self.flush(sync=True)
+            self._f.close()
+
+    @staticmethod
+    def read(path: str) -> list[dict]:
+        """Parse a journal, dropping a torn final line (the only line a
+        crash can leave half-written)."""
+        out: list[dict] = []
+        with open(path, encoding="utf-8") as f:
+            lines = f.read().splitlines()
+        for i, line in enumerate(lines):
+            if not line.strip():
+                continue
+            try:
+                out.append(json.loads(line))
+            except ValueError:
+                if i == len(lines) - 1:
+                    break           # torn tail from the crash: ignorable
+                raise ValueError(
+                    f"corrupt WAL line {i + 1} of {len(lines)} in {path}")
+        return out
+
+
+@dataclasses.dataclass
+class RecoveredState:
+    """Pure fold of a journal: everything a fresh plane needs installed."""
+    submits: list          # submit records, in order
+    traces: list           # TaskTrace, in insertion order (attach + retires)
+    log: list              # AssignmentRecord, in order
+    assignments: list      # seed-shaped (task, node, start, end) tuples
+    tasks: dict            # instance -> post-transition task-state dict
+    in_flight: dict        # attempt id -> {instance, node, cores, mem_gb, t}
+    stats: dict            # latest retry-stats snapshot
+    attempt_seq: int       # next unused attempt id
+    elapsed: float         # run-relative seconds covered by the journal
+    max_end: float         # latest completion end time
+    finished: bool         # clean `finish` record present
+    config: Optional[dict]  # journaled ControlPlaneConfig fields
+
+
+def replay(records: list[dict]) -> RecoveredState:
+    """Fold journal records into control-plane state.  Deterministic and
+    pure: replaying the same journal twice yields identical state, which is
+    what makes a second ``recover()`` on a final log a no-op."""
+    st = RecoveredState(submits=[], traces=[], log=[], assignments=[],
+                        tasks={}, in_flight={},
+                        stats={"oom_retries": 0, "task_retries": 0,
+                               "timeouts": 0, "failures": 0,
+                               "stale_results": 0, "lost_attempts": 0,
+                               "adopted_attempts": 0},
+                        attempt_seq=0, elapsed=0.0, max_end=0.0,
+                        finished=False, config=None)
+    for rec in records:
+        k = rec["k"]
+        t = float(rec.get("t", 0.0))
+        if t > st.elapsed:
+            st.elapsed = t
+        if k == "config":
+            st.config = rec["cfg"]
+        elif k == "attach":
+            st.traces.extend(trace_from_dict(d) for d in rec["traces"])
+        elif k == "submit":
+            st.submits.append(rec)
+        elif k == "launch":
+            aid = int(rec["attempt"])
+            st.attempt_seq = max(st.attempt_seq, aid + 1)
+            st.in_flight[aid] = {
+                "instance": rec["instance"], "node": rec["node"],
+                "cores": int(rec["cores"]), "mem_gb": float(rec["mem_gb"]),
+                "t": t}
+            ts = st.tasks.setdefault(rec["instance"], {})
+            ts.update(state="running", node=rec["node"], start_t=t,
+                      req_mem_gb=float(rec["mem_gb"]))
+        elif k == "retire":
+            primary = record_from_list(rec["record"])
+            st.log.append(primary)
+            if primary.completed:
+                st.assignments.append((primary.task, primary.node,
+                                       primary.start, primary.end))
+                if primary.end > st.max_end:
+                    st.max_end = primary.end
+            for xs in rec.get("extra", ()):
+                st.log.append(record_from_list(xs))
+            if rec.get("trace") is not None:
+                st.traces.append(trace_from_dict(rec["trace"]))
+            if rec.get("attempt") is not None:
+                st.in_flight.pop(int(rec["attempt"]), None)
+            st.tasks.setdefault(rec["instance"], {}).update(rec["task"])
+            for c in rec.get("cancelled", ()):
+                st.tasks.setdefault(c, {})["state"] = "killed"
+            st.stats.update(rec.get("stats", {}))
+        elif k == "finish":
+            st.finished = True
+        elif k == "recovered":
+            # reconcile outcome: in_flight itself is settled by the retire
+            # records recovery journals for lost attempts; only the
+            # adopted/lost counters need carrying forward
+            st.stats.update(rec.get("stats", {}))
+        else:
+            raise ValueError(f"unknown WAL record kind: {k!r}")
+    return st
+
+
+# --------------------------------------------------------------------- chaos
+
+class ChaosPlaneCrash(RuntimeError):
+    """Raised by ``ChaosBackend`` in ``crash_mode="raise"`` when the
+    scheduled plane-crash time arrives (in-process tests; the default
+    ``"sigkill"`` mode kills the process outright like a real crash)."""
+
+
+@dataclasses.dataclass
+class ChaosConfig:
+    """Deterministic chaos knobs (``FaultConfig``'s real-execution twin).
+
+    Per-attempt draws are pure in ``(instance, per-instance launch
+    ordinal, seed)`` via crc32 streams — the same schedule replays across
+    processes, which is what lets the recovery bench compare a chaos run
+    against an uninterrupted one.  ``max_*_per_instance`` bounds chaos per
+    instance so every workload still terminates under ``*_prob=1.0``.
+    """
+    seed: int = 0
+    # -- attempt kills (SIGKILL through the backend's kill path) ----------
+    kill_prob: float = 0.0
+    kill_progress: tuple = (0.2, 0.8)   # fraction of nominal_attempt_s
+    nominal_attempt_s: float = 1.0      # stand-in for unknowable real work
+    max_kills_per_instance: int = 1
+    # -- hangs (delivery withheld forever; only the reaper saves the run) -
+    hang_prob: float = 0.0
+    max_hangs_per_instance: int = 1
+    # -- delivery chaos (late + duplicate poll results) -------------------
+    delay_prob: float = 0.0
+    delay_s: tuple = (0.05, 0.3)
+    dup_prob: float = 0.0
+    # -- plane crash ------------------------------------------------------
+    crash_plane_at_s: Optional[float] = None   # wall s after first launch
+    crash_mode: str = "sigkill"                # "sigkill" | "raise"
+
+    def __post_init__(self):
+        for name in ("kill_prob", "hang_prob", "delay_prob", "dup_prob"):
+            if not 0.0 <= getattr(self, name) <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1]")
+        if self.crash_mode not in ("sigkill", "raise"):
+            raise ValueError(f"unknown crash_mode: {self.crash_mode!r}")
+        if not self.nominal_attempt_s > 0.0:
+            raise ValueError("nominal_attempt_s must be > 0")
+
+
+class ChaosBackend:
+    """Deterministic fault-injecting wrapper around a real backend.
+
+    Protocol-transparent: the control plane sees an ``ExecutionBackend``;
+    underneath, attempts get SIGKILLed mid-run, hung (their completion is
+    withheld so the liveness reaper must fire), their deliveries delayed or
+    duplicated, and the plane process itself killed at a scheduled time.
+    A chaos kill arrives to the harvester as SIGKILL — indistinguishable
+    from a kernel OOM kill — so the wrapper rewrites ``oom=False`` on
+    deliveries it caused: chaos charges the *fault* budget, exactly like
+    the engine's fault model, never the OOM-escalation path.
+    """
+
+    is_simulated = False
+
+    def __init__(self, inner, chaos: Optional[ChaosConfig] = None):
+        self.inner = inner
+        self.cfg = chaos if chaos is not None else ChaosConfig()
+        self._t0: Optional[float] = None
+        self._ordinal: dict = defaultdict(int)   # instance -> launches seen
+        self._ord_of: dict = {}          # (instance, attempt_id) -> ordinal
+        self._kill_count: dict = defaultdict(int)
+        self._hang_count: dict = defaultdict(int)
+        self._pending_kills: list = []   # (kill_at, instance, attempt_id)
+        self._chaos_killed: set = set()  # (instance, attempt_id)
+        self._withheld: set = set()      # (instance, attempt_id) hung
+        self._buffer: list = []          # (release_t, AttemptResult)
+        self.stats = {"kills": 0, "hangs": 0, "delays": 0, "dups": 0}
+
+    # -- deterministic draws ---------------------------------------------
+    def _draw(self, instance: str, ordinal: int, salt: int, n: int):
+        return np.random.default_rng(
+            (stable_seed(instance), self.cfg.seed, ordinal, salt)).random(n)
+
+    def _maybe_crash(self):
+        if (self.cfg.crash_plane_at_s is None or self._t0 is None
+                or time.monotonic() - self._t0 < self.cfg.crash_plane_at_s):
+            return
+        if self.cfg.crash_mode == "raise":
+            raise ChaosPlaneCrash(
+                f"chaos crash at t={self.cfg.crash_plane_at_s}s")
+        os.kill(os.getpid(), signal.SIGKILL)     # a real, ungraceful crash
+
+    # -- protocol ---------------------------------------------------------
+    def nodes(self):
+        return self.inner.nodes()
+
+    def nodespecs(self):
+        return self.inner.nodespecs()
+
+    def launch(self, task, node, request, attempt_id: int = -1):
+        if self._t0 is None:
+            self._t0 = time.monotonic()
+        self._maybe_crash()
+        inst = task.instance
+        ordinal = self._ordinal[inst]
+        self._ordinal[inst] += 1
+        self._ord_of[(inst, attempt_id)] = ordinal
+        cfg = self.cfg
+        r = self._draw(inst, ordinal, _SALT_CHAOS_FAULT, 3)
+        if (cfg.kill_prob > 0.0 and r[0] < cfg.kill_prob
+                and self._kill_count[inst] < cfg.max_kills_per_instance):
+            self._kill_count[inst] += 1
+            lo, hi = cfg.kill_progress
+            frac = lo + (hi - lo) * float(r[1])
+            self._pending_kills.append(
+                (time.monotonic() + frac * cfg.nominal_attempt_s,
+                 inst, attempt_id))
+        elif (cfg.hang_prob > 0.0 and r[2] < cfg.hang_prob
+                and self._hang_count[inst] < cfg.max_hangs_per_instance):
+            self._hang_count[inst] += 1
+            self._withheld.add((inst, attempt_id))
+            self.stats["hangs"] += 1
+        self.inner.launch(task, node, request, attempt_id=attempt_id)
+
+    def poll(self, timeout=None):
+        self._maybe_crash()
+        now = time.monotonic()
+        due = [k for k in self._pending_kills if k[0] <= now]
+        if due:
+            self._pending_kills = [k for k in self._pending_kills
+                                   if k[0] > now]
+            for _, inst, aid in due:
+                self._chaos_killed.add((inst, aid))
+                self.stats["kills"] += 1
+                self.inner.kill(inst)
+        out = []
+        for r in self.inner.poll(timeout=timeout):
+            key = (r.instance, r.attempt_id)
+            if key in self._withheld:
+                continue                     # hung: never delivered
+            if key in self._chaos_killed:
+                # chaos SIGKILL looks like a kernel OOM kill to the
+                # harvester; reattribute it to the fault budget
+                r.oom = False
+                r.detail = "chaos-kill"
+            ordinal = self._ord_of.get(key,
+                                       max(self._ordinal[r.instance] - 1, 0))
+            d = self._draw(r.instance, ordinal, _SALT_CHAOS_DELIVERY, 4)
+            cfg = self.cfg
+            lo, hi = cfg.delay_s
+            if cfg.dup_prob > 0.0 and d[2] < cfg.dup_prob:
+                self.stats["dups"] += 1
+                self._buffer.append((now + lo + (hi - lo) * float(d[3]),
+                                     dataclasses.replace(r)))
+            if cfg.delay_prob > 0.0 and d[0] < cfg.delay_prob:
+                self.stats["delays"] += 1
+                self._buffer.append((now + lo + (hi - lo) * float(d[1]), r))
+            else:
+                out.append(r)
+        if self._buffer:
+            still = []
+            for release, r in self._buffer:
+                if release <= now:
+                    out.append(r)
+                else:
+                    still.append((release, r))
+            self._buffer = still
+        self._maybe_crash()
+        return out
+
+    def kill(self, instance):
+        self._pending_kills = [k for k in self._pending_kills
+                               if k[1] != instance]
+        self.inner.kill(instance)
+
+    def reconcile(self, attempts):
+        return self.inner.reconcile(attempts)
+
+    def forget(self, attempt_id):
+        self.inner.forget(attempt_id)
+
+    def close(self):
+        self.inner.close()
+
+
+# ----------------------------------------------------- cross-process driver
+
+def child_main(argv=None) -> int:
+    """Run one (possibly chaos-armed) control plane from a serialized
+    driver spec — the sacrificial process of the recovery tests/bench:
+
+        python -m repro.workflow.recovery '<json>'
+
+    Spec fields: ``wal``, ``registry``, ``nodes`` (LocalNode fields),
+    ``workflow`` (``spec_to_dict``), ``submits``, ``probe_table`` (per-task
+    probe kwargs), ``scheduler``/``sched_seed``, optional ``chaos``
+    (ChaosConfig fields), ``config`` (ControlPlaneConfig fields) and
+    ``preload_traces`` (warm history, e.g. to arm the timeout reaper).
+    Prints one ``RECOVERY_RESULT {json}`` line on clean completion.
+    """
+    from repro.core.monitor import TraceDB
+    from repro.core.scheduler import make_scheduler
+    from repro.workflow.controlplane import ControlPlane, ControlPlaneConfig
+    from repro.workflow.jobmanager import LocalNode, LocalProcessBackend
+    from repro.workflow.selfhost import make_probe_runner
+
+    spec = json.loads((argv if argv is not None else sys.argv[1:])[0])
+    nodes = [LocalNode(name=n["name"], cpus=tuple(n.get("cpus", ())),
+                       mem_gb=float(n.get("mem_gb", 1.0)),
+                       scratch=n.get("scratch", ""),
+                       kind=n.get("kind", "local"))
+             for n in spec["nodes"]]
+    for n in nodes:
+        if n.scratch:
+            os.makedirs(n.scratch, exist_ok=True)
+    backend = LocalProcessBackend(
+        nodes, runner=make_probe_runner(spec.get("probe_table") or {}),
+        registry_dir=spec["registry"])
+    if spec.get("chaos"):
+        chaos = ChaosConfig(**{k: tuple(v) if isinstance(v, list) else v
+                               for k, v in spec["chaos"].items()})
+        backend = ChaosBackend(backend, chaos)
+    db = TraceDB()
+    for d in spec.get("preload_traces") or ():
+        db.add(trace_from_dict(d))
+    sched = make_scheduler(spec.get("scheduler", "fair"),
+                           [n.spec() for n in nodes],
+                           seed=int(spec.get("sched_seed", 0)))
+    cfg = ControlPlaneConfig(**spec["config"]) if spec.get("config") \
+        else ControlPlaneConfig()
+    cp = ControlPlane(backend, sched, db, cfg, wal=spec["wal"])
+    wf = spec_from_dict(spec["workflow"])
+    for sub in spec["submits"]:
+        cp.submit(wf, run_id=int(sub.get("run_id", 0)),
+                  seed=int(sub.get("seed", 0)),
+                  at=float(sub.get("at", 0.0)),
+                  input_scale=float(sub.get("input_scale", 1.0)),
+                  tenant=sub.get("tenant", "default"),
+                  prefix=sub.get("prefix"))
+    res = cp.run()
+    backend.close()
+    print("RECOVERY_RESULT " + json.dumps(
+        {"makespan": res["makespan"],
+         "completed": sum(1 for r in cp.assignment_log if r.completed)}),
+        flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(child_main())

@@ -33,10 +33,15 @@ RESULT_TAG = "TAREMA_RESULT "
 # ----------------------------------------------------------------- payloads
 
 def _payload_probe(spin_ms: float = 20.0, rss_mb: float = 0.0,
-                   fail: bool = False, scratch: str = None) -> dict:
+                   fail: bool = False, sleep_ms: float = 0.0,
+                   io_mb: float = 0.0, scratch: str = None) -> dict:
     """Pure-python test workhorse: cheap spin, optional RSS ballast,
-    optional deliberate failure.  No numpy/jax import — a probe child
-    starts in ~50 ms, which keeps the control-plane tests fast."""
+    optional sleep (low-cpu tasks), optional scratch writes (measured
+    logical io), optional deliberate failure.  No numpy/jax import — a
+    probe child starts in ~50 ms, which keeps the control-plane tests
+    fast.  The knobs give each probe task an *engineered* usage vector,
+    which is what lets the recovery bench assert measured-label equality
+    across a crash/recover boundary."""
     if fail:
         raise RuntimeError("probe payload asked to fail")
     ballast = bytearray(int(rss_mb * 1e6)) if rss_mb > 0 else bytearray()
@@ -44,11 +49,26 @@ def _payload_probe(spin_ms: float = 20.0, rss_mb: float = 0.0,
     # written, and the whole point of the ballast is a measurable RSS
     for i in range(0, len(ballast), 4096):
         ballast[i] = 1
+    written = 0
+    if io_mb > 0:
+        import tempfile
+        with tempfile.NamedTemporaryFile(dir=scratch or None) as f:
+            block = b"\xa5" * (1 << 20)
+            for _ in range(int(io_mb)):
+                f.write(block)
+                written += len(block)
+            f.flush()
+            os.fsync(f.fileno())
+    if sleep_ms > 0:
+        time.sleep(sleep_ms / 1e3)
     deadline = time.perf_counter() + spin_ms / 1e3
     x = 1.0
     while time.perf_counter() < deadline:
         x = x * 1.0000001 % 10.0
-    return {"x": x, "ballast_mb": len(ballast) / 1e6}
+    out = {"x": x, "ballast_mb": len(ballast) / 1e6}
+    if written:
+        out["io_mb"] = written / 1e6   # logical io -> deterministic labels
+    return out
 
 
 def _payload_cpu_burn(n: int = 384, reps: int = 6,
@@ -276,6 +296,22 @@ def make_runner(scale: str = "quick", overrides: dict = None):
         if overrides and task.name in overrides:
             kwargs.update(overrides[task.name])
         return {"fn": fn, "kwargs": kwargs}
+
+    return runner
+
+
+def make_probe_runner(table: dict = None):
+    """Runner that maps EVERY task to the pure-python ``probe`` payload,
+    with per-task-name kwargs from ``table`` (e.g. ``{"transform":
+    {"spin_ms": 120, "rss_mb": 40}}``).  The recovery tests/bench use it:
+    probes are cheap (~50 ms interpreter start, no numpy), their runtime
+    and RSS are *controlled* — so labels are reproducible across a chaos
+    run and an uninterrupted one — and the whole table is JSON, so the
+    cross-process driver (``repro.workflow.recovery``) can ship it."""
+    table = dict(table or {})
+
+    def runner(task: TaskInstance, node) -> dict:
+        return {"fn": "probe", "kwargs": dict(table.get(task.name, {}))}
 
     return runner
 

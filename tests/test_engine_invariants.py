@@ -374,3 +374,89 @@ def test_engine_invariants_match_disabled_protocol(seed):
     res = eng.run()
     assert all(node != dead for (_, node, _, _) in res["assignments"])
     assert all(t.state == "done" for t in eng.all_tasks.values())
+
+
+# ---------------------------------------------------------------------------
+# Real wall-clock loop: the same reservation-conservation discipline, under
+# deterministic chaos (PR 10).  CheckedControlPlane asserts per-transition
+# what CheckedEngine asserts for the simulator: kills, stale duplicate
+# deliveries, backoff requeues and timeout reaping must never drive a
+# node's free cores/mem negative or leak a reservation.
+
+def _checked_control_plane():
+    from repro.workflow.controlplane import ControlPlane
+
+    class CheckedControlPlane(ControlPlane):
+        def _assert_capacity(self):
+            na = self._na
+            assert (na.free_cores >= 0).all(), "free cores went negative"
+            assert (na.free_mem >= -1e-9).all(), "free mem went negative"
+            assert (na.free_cores <= na.cores).all(), "cores over-released"
+            assert (na.free_mem <= na.mem_gb + 1e-9).all(), \
+                "mem over-released"
+            assert (na.n_running >= 0).all()
+
+        def _launch(self, task, node):
+            super()._launch(task, node)
+            self._assert_capacity()
+
+        def _release(self, task):
+            super()._release(task)
+            self._assert_capacity()
+
+        def _on_result(self, r):
+            super()._on_result(r)
+            self._assert_capacity()
+
+    return CheckedControlPlane
+
+
+def test_controlplane_invariants_under_chaos(tmp_path):
+    import os as _os
+
+    from repro.workflow.controlplane import ControlPlaneConfig
+    from repro.workflow.jobmanager import LocalNode, LocalProcessBackend
+    from repro.workflow.recovery import ChaosBackend, ChaosConfig
+    from repro.workflow.selfhost import make_probe_runner
+
+    wf = WorkflowSpec("chaoswf", [
+        AbstractTask("a", 2, {"cpu": 1.0, "mem": 1.0, "io": 1.0},
+                     peak_mem_gb=0.1, req_cores=1, req_mem_gb=0.2),
+        AbstractTask("b", 3, {"cpu": 1.0, "mem": 1.0, "io": 1.0},
+                     peak_mem_gb=0.1, deps=("a",), req_cores=1,
+                     req_mem_gb=0.2),
+        AbstractTask("c", 1, {"cpu": 1.0, "mem": 1.0, "io": 1.0},
+                     peak_mem_gb=0.1, deps=("b",), req_cores=1,
+                     req_mem_gb=0.2),
+    ])
+    nodes = [LocalNode(f"cn{i}", cpus=(), mem_gb=1.0,
+                       scratch=str(tmp_path / f"s{i}"), kind="local")
+             for i in range(2)]
+    for nd in nodes:
+        _os.makedirs(nd.scratch, exist_ok=True)
+    be = ChaosBackend(
+        LocalProcessBackend(
+            nodes,
+            runner=make_probe_runner({n: {"spin_ms": 120} for n in "abc"}),
+            registry_dir=str(tmp_path / "reg")),
+        ChaosConfig(seed=5, kill_prob=0.5, nominal_attempt_s=0.12,
+                    dup_prob=0.5, delay_prob=0.3, delay_s=(0.02, 0.08)))
+    specs = [n.spec() for n in nodes]
+    cp = _checked_control_plane()(
+        be, make_scheduler("fair", specs, seed=0), TraceDB(),
+        ControlPlaneConfig(poll_interval_s=0.02, backoff_base_s=0.05))
+    cp.submit(wf, run_id=0, seed=0)
+    res = cp.run(max_wall_s=120)
+    be.close()
+
+    # post-hoc: every instance final, all reservations handed back exactly
+    for t in cp.all_tasks.values():
+        assert t.state in ("done", "killed"), (t.instance, t.state)
+    na = cp._na
+    assert (na.free_cores == na.cores).all()
+    assert abs(na.free_mem - na.mem_gb).max() < 1e-9
+    assert (na.n_running == 0).all()
+    assert not cp.running and not cp._live_attempt
+    done = [r for r in cp.assignment_log if r.completed]
+    assert len(done) == len({r.instance for r in done}) == 6
+    assert res["makespan"] > 0
